@@ -1,0 +1,148 @@
+"""Table 2 analogue: macro-F1 of all 9 schemes on both tasks.
+
+FENIX flow/packet-level CNN+RNN (float-trained, INT8-deployed) vs FlowLens,
+NetBeacon, Leo, BoS, N3IC on the synthetic ISCX-like and USTC-like datasets
+(DESIGN.md §7: relative comparison on identical data).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import bos as bos_lib
+from repro.baselines import n3ic as n3ic_lib
+from repro.baselines.common import flow_vote, macro_f1
+from repro.baselines.flowlens import FlowLensModel, markers
+from repro.baselines.leo import LeoModel
+from repro.baselines.netbeacon import NetBeaconModel
+from repro.configs.fenix_models import fenix_cnn, fenix_rnn
+from repro.data.synthetic_traffic import (class_weights, make_flows,
+                                          task_meta, train_test_split,
+                                          windows_from_flows)
+from repro.models import traffic
+from repro.quant.quantize import int8_apply, quantize_traffic
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig, batch_iterator
+
+
+def _split_flows(flows, test_frac=0.25, seed=0):
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(flows))
+    n_test = int(len(flows) * test_frac)
+    te = [flows[i] for i in idx[:n_test]]
+    tr = [flows[i] for i in idx[n_test:]]
+    return tr, te
+
+
+def _train_nn(loss_fn, params, x, y, steps, n_classes, lr=3e-3, seed=0):
+    w = class_weights(y, n_classes)
+    t = Trainer(loss_fn, params,
+                TrainerConfig(total_steps=steps, log_every=10**9,
+                              opt=OptConfig(lr=lr, warmup_steps=steps // 10,
+                                            total_steps=steps,
+                                            weight_decay=0.01)))
+    t.run(batch_iterator(x, y, 256, seed=seed, weights=w))
+    return t.params
+
+
+def run_task(task: str, n_flows: int = 500, steps: int = 300,
+             seed: int = 0) -> Dict[str, Dict[str, float]]:
+    classes, _ = task_meta(task)
+    k = len(classes)
+    flows = make_flows(task, n_flows, seed=seed, min_per_class=30)
+    tr_flows, te_flows = _split_flows(flows, seed=seed)
+    xtr, ytr, ftr = windows_from_flows(tr_flows, seed=seed)
+    xte, yte, fte = windows_from_flows(te_flows, seed=seed + 1)
+    out: Dict[str, Dict[str, float]] = {}
+
+    # ---- FENIX CNN / RNN (packet + flow level), INT8-deployed ----
+    for mk, nm in ((fenix_cnn, "fenix-cnn"), (fenix_rnn, "fenix-rnn")):
+        cfg = mk(k)
+        params = traffic.init(cfg, seed=seed)
+        params = _train_nn(lambda p, b: traffic.loss_fn(p, cfg, b), params,
+                           xtr, ytr, steps, k)
+        qp = quantize_traffic(params, cfg, jnp.asarray(xtr[:512]))
+        pred = np.asarray(jnp.argmax(
+            int8_apply(qp, cfg, jnp.asarray(xte)), -1))
+        pkt_f1 = macro_f1(yte, pred, k)
+        uf, votes = flow_vote(pred, fte)
+        flow_labels = np.asarray([yte[fte == f][0] for f in uf])
+        flow_f1 = macro_f1(flow_labels, votes, k)
+        out[f"{nm}-pkt"] = {"macro_f1": pkt_f1}
+        out[f"{nm}-flow"] = {"macro_f1": flow_f1}
+
+    # ---- FlowLens (flow-level only) ----
+    xf, yf = markers(tr_flows)
+    xfe, yfe = markers(te_flows)
+    fl = FlowLensModel(k)
+    fl.fit(xf, yf)
+    out["flowlens-flow"] = {"macro_f1": macro_f1(yfe, fl.predict(xfe), k)}
+
+    # ---- Leo ----
+    leo = LeoModel(k)
+    leo.fit(tr_flows)
+    r = leo.predict_packets(te_flows)
+    out["leo-pkt"] = {"macro_f1": macro_f1(r["label"], r["pred"], k)}
+
+    # ---- NetBeacon ----
+    nb = NetBeaconModel(k, seed=seed)
+    nb.fit(tr_flows)
+    r = nb.predict_packets(te_flows)
+    out["netbeacon-pkt"] = {"macro_f1": macro_f1(r["label"], r["pred"], k)}
+
+    # ---- BoS ----
+    cfg = fenix_cnn(k)  # reuse embedding sizes
+    params = bos_lib.init(cfg, seed=seed)
+    params = _train_nn(lambda p, b: bos_lib.loss_fn(p, cfg, b), params,
+                       xtr, ytr, steps, k)
+    pred = np.asarray(jnp.argmax(bos_lib.apply(params, cfg,
+                                               jnp.asarray(xte)), -1))
+    out["bos-pkt"] = {"macro_f1": macro_f1(yte, pred, k)}
+
+    # ---- N3IC ----
+    xn, yn, fn_ = n3ic_lib.build_features(tr_flows)
+    xne, yne, fne = n3ic_lib.build_features(te_flows)
+    params = n3ic_lib.init(xn.shape[1], k, seed=seed)
+    wts = class_weights(yn, k)
+
+    def n3ic_batches():
+        rng = np.random.default_rng(seed)
+        while True:
+            idx = rng.integers(0, len(yn), 256)
+            yield {"payload": jnp.asarray(xn[idx]),
+                   "label": jnp.asarray(yn[idx]),
+                   "weight": jnp.asarray(wts[idx], jnp.float32)}
+
+    t = Trainer(lambda p, b: n3ic_lib.loss_fn(p, b), params,
+                TrainerConfig(total_steps=steps, log_every=10**9,
+                              opt=OptConfig(lr=3e-3,
+                                            warmup_steps=steps // 10,
+                                            total_steps=steps,
+                                            weight_decay=0.01)))
+    t.run(n3ic_batches())
+    pred = np.asarray(jnp.argmax(n3ic_lib.apply(t.params,
+                                                jnp.asarray(xne)), -1))
+    out["n3ic-pkt"] = {"macro_f1": macro_f1(yne, pred, k)}
+    return out
+
+
+def main(n_flows: int = 500, steps: int = 300, out_path: str = None):
+    results = {}
+    for task in ("iscx", "ustc"):
+        t0 = time.time()
+        results[task] = run_task(task, n_flows=n_flows, steps=steps)
+        results[task]["_wall_s"] = round(time.time() - t0, 1)
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    import pprint
+    pprint.pprint(main())

@@ -1,0 +1,70 @@
+"""Appendix A validation: E[transmission interval] == N/V, empirically.
+
+Monte-carlo over heterogeneous flow-rate mixes; also reports the per-rate
+expected periods (Eq. 6) vs simulation — the mechanism that keeps slow
+flows sampled under load (the paper's fairness argument)."""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.probability import expected_period, probability
+
+
+def simulate(rates: np.ndarray, v: float, horizon: float,
+             seed: int = 0) -> Dict:
+    rng = np.random.default_rng(seed)
+    n = len(rates)
+    q = rates.sum()
+    intervals_all: List[float] = []
+    per_rate: Dict[float, List[float]] = {}
+    for qi in rates:
+        t_last, c, t = 0.0, 0, 0.0
+        ivs = []
+        while t < horizon:
+            t += rng.exponential(1.0 / qi)
+            c += 1
+            p = probability(np.asarray([t - t_last]), np.asarray([c]),
+                            n, q, v)[0]
+            if rng.random() < p:
+                ivs.append(t - t_last)
+                t_last, c = t, 0
+        intervals_all.extend(ivs)
+        per_rate.setdefault(round(qi, 6), []).extend(ivs)
+    return {
+        "measured_mean": float(np.mean(intervals_all)),
+        "expected_nv": n / v,
+        "per_rate": {str(k): {"measured": float(np.mean(v_)),
+                              "eq6": expected_period(k, n, q, v)}
+                     for k, v_ in per_rate.items() if v_},
+    }
+
+
+def main(out_path: str = None) -> List[Dict]:
+    rows = []
+    for name, rates in (
+        ("uniform", np.full(50, 0.01)),
+        ("bimodal_10x", np.concatenate([np.full(25, 0.002),
+                                        np.full(25, 0.02)])),
+        ("lognormal", np.random.default_rng(0).lognormal(-5, 1.0, 50)),
+    ):
+        q = rates.sum()
+        v = q / 10.0
+        r = simulate(rates, v, horizon=2_000_000)
+        r["mix"] = name
+        r["rel_err"] = abs(r["measured_mean"] - r["expected_nv"]) \
+            / r["expected_nv"]
+        rows.append(r)
+        print(f"{name}: measured {r['measured_mean']:.0f} vs N/V "
+              f"{r['expected_nv']:.0f} (rel err {r['rel_err']:.3f})")
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

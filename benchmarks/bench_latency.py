@@ -1,0 +1,74 @@
+"""Figure 11 analogue: latency breakdown, FENIX vs control-plane path.
+
+Components (paper): internal transmission (PCB, sub-us), external
+transmission (optical, 1-3us), inference (FENIX 1.2us FPGA vs FlowLens
+>1000us CPU).  We report:
+  - the FPGA cycle-model latency of our INT8 models (ZU19EG-like array)
+  - the TPU-v5e roofline latency of the same window batch (Pallas kernel)
+  - measured CPU wall-time per inference (this container, for reference)
+  - the control-plane path modeled with the paper's measured RTTs.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.fenix_models import fenix_cnn, fenix_rnn
+from repro.core.model_engine.inference import (CycleModel, EngineModel,
+                                               macs_per_inference,
+                                               tpu_latency_us)
+from repro.data.synthetic_traffic import make_flows, windows_from_flows
+from repro.models import traffic
+from repro.quant.quantize import quantize_traffic
+
+# paper Figure 11 measurements (for the comparison rows)
+PAPER = {
+    "fenix": {"internal_us": 0.8, "external_us": 2.0, "inference_us": 1.2},
+    "flowlens": {"transmission_us": 2100.0, "inference_us": 1500.0},
+}
+
+
+def main(out_path: str = None) -> Dict:
+    flows = make_flows("iscx", 60, seed=0)
+    x, _, _ = windows_from_flows(flows)
+    out: Dict[str, Dict] = {"paper_fig11": PAPER}
+    cm = CycleModel()
+    for mk in (fenix_cnn, fenix_rnn):
+        cfg = mk(7)
+        params = traffic.init(cfg, 0)
+        qp = quantize_traffic(params, cfg, jnp.asarray(x[:128]))
+        model = EngineModel(cfg, qp)
+        batch = jnp.asarray(x[:128])
+        model.infer(batch)  # warm up / compile
+        t0 = time.time()
+        reps = 20
+        for _ in range(reps):
+            r = model.infer(batch)
+        jax.block_until_ready(r)
+        cpu_us = (time.time() - t0) / reps / batch.shape[0] * 1e6
+        out[cfg.name] = {
+            "macs_per_window": macs_per_inference(cfg),
+            "fpga_cycle_model_us": cm.latency_us(cfg),
+            "fpga_throughput_inf_s": cm.throughput_inf_per_s(cfg),
+            "tpu_roofline": tpu_latency_us(cfg, batch=128),
+            "cpu_measured_us_per_inf": cpu_us,
+            "speedup_vs_control_plane":
+                (PAPER["flowlens"]["transmission_us"]
+                 + PAPER["flowlens"]["inference_us"])
+                / (PAPER["fenix"]["external_us"] + cm.latency_us(cfg)),
+        }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    import pprint
+    pprint.pprint(main())

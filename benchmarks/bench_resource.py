@@ -1,0 +1,100 @@
+"""Tables 3+4 analogue: resource overhead of the Data/Model Engines.
+
+Switch-side (Table 3 proxy): SRAM bytes of the Flow Info Table + rings +
+LUT vs alternatives' published footprints; pipeline-stage count proxy =
+number of sequential integer ops per packet.
+
+FPGA-side (Table 4 proxy): per-module MAC counts, weight bytes and VMEM
+working set of the INT8 kernels (LUT/FF/BRAM/DSP analogue on TPU).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.fenix_models import fenix_cnn, fenix_rnn
+from repro.core.data_engine.state import EngineConfig
+from repro.core.model_engine.inference import macs_per_inference
+
+TOFINO2_SRAM_BITS = 200e6      # per pipeline (paper §6)
+
+
+def data_engine_resources(cfg: EngineConfig) -> Dict[str, float]:
+    n = cfg.n_slots
+    flow_table = n * (4 + 4 + 4 + 4 + 4 + 4 + 4)    # 7 int32 fields
+    rings = n * cfg.ring_depth * cfg.feat_dim * 4
+    lut = cfg.lut.t_bins * cfg.lut.c_bins * 4
+    total = flow_table + rings + lut
+    return {
+        "flow_table_bytes": flow_table,
+        "ring_bytes": rings,
+        "lut_bytes": lut,
+        "total_sram_bytes": total,
+        "sram_fraction_tofino2": total * 8 / TOFINO2_SRAM_BITS,
+        # pipeline stages: hash, lookup, stats, LUT, bucket, ring, deparse
+        "stage_proxy": 7,
+        "tcam_entries": 0,  # the preliminary tree is compare-only (SRAM)
+    }
+
+
+def model_engine_resources() -> Dict[str, Dict[str, float]]:
+    out = {}
+    for mk in (fenix_cnn, fenix_rnn):
+        cfg = mk(12)
+        macs = macs_per_inference(cfg)
+        e = cfg.embed_dim
+        emb_bytes = (cfg.len_buckets + cfg.ipd_buckets) * e  # int8
+        if cfg.kind == "cnn":
+            w = 0
+            c_prev = 2 * e
+            for ch in cfg.conv_filters:
+                w += cfg.conv_kernel * c_prev * ch
+                c_prev = ch
+            f_prev = c_prev
+            for fc in cfg.fc_dims:
+                w += f_prev * fc
+                f_prev = fc
+            w += f_prev * cfg.num_classes
+        else:
+            u = cfg.rnn_units
+            w = (2 * e) * u + u * u + u * cfg.num_classes
+        out[cfg.name] = {
+            "macs_per_window": macs,
+            "weight_bytes_int8": w,
+            "embed_bytes_int8": emb_bytes,
+            "vmem_working_set_bytes": w + emb_bytes + 128 * 128 * 4,
+            "vmem_fraction_v5e": (w + emb_bytes) / (128 * 2**20),
+        }
+    return out
+
+
+# published Table 3 numbers for context (from the paper)
+PAPER_TABLE3 = {
+    "FENIX": {"SRAM": 0.129, "TCAM": 0.044, "Stage": 9},
+    "FlowLens": {"SRAM": 0.342, "TCAM": 0.0, "Stage": 9},
+    "BoS": {"SRAM": 0.263, "TCAM": 0.063, "Stage": 12},
+    "Leo": {"SRAM": 0.269, "TCAM": 0.09, "Stage": 12},
+    "NetBeacon": {"SRAM": 0.116, "TCAM": 0.188, "Stage": 12},
+}
+
+
+def main(out_path: str = None) -> Dict:
+    res = {
+        "data_engine": data_engine_resources(EngineConfig()),
+        "data_engine_64k_flows": data_engine_resources(
+            EngineConfig(n_slots_log2=16)),
+        "model_engine": model_engine_resources(),
+        "paper_table3_published": PAPER_TABLE3,
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(res, f, indent=1)
+    return res
+
+
+if __name__ == "__main__":
+    import pprint
+    pprint.pprint(main())

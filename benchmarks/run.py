@@ -1,0 +1,119 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per the repo convention; full
+JSON artifacts land in benchmarks/results/.
+
+  accuracy     — Table 2 (macro-F1, 9 schemes x 2 tasks)
+  resource     — Tables 3+4 (SRAM/VMEM/MAC proxies)
+  scalability  — Figure 10 (F1 vs concurrency/throughput)
+  latency      — Figure 11 (FPGA cycle model, TPU roofline, CPU measured)
+  fairness     — Appendix A (E[interval] == N/V)
+  roofline     — §Roofline table from the dry-run artifacts (if present)
+
+``python -m benchmarks.run [--fast]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _row(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.2f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller accuracy/scalability settings")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+    os.makedirs(RESULTS, exist_ok=True)
+    only = args.only.split(",") if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    print("name,us_per_call,derived")
+
+    if want("accuracy"):
+        from benchmarks import bench_accuracy
+        t0 = time.time()
+        n, s = (250, 150) if args.fast else (700, 350)
+        res = bench_accuracy.main(n_flows=n, steps=s,
+                                  out_path=os.path.join(RESULTS,
+                                                        "accuracy.json"))
+        for task in ("iscx", "ustc"):
+            best = res[task]["fenix-rnn-flow"]["macro_f1"]
+            pkt = res[task]["fenix-cnn-pkt"]["macro_f1"]
+            _row(f"accuracy_{task}", (time.time() - t0) * 1e6,
+                 f"fenix_flow_f1={best:.3f};fenix_pkt_f1={pkt:.3f}")
+
+    if want("resource"):
+        from benchmarks import bench_resource
+        t0 = time.time()
+        res = bench_resource.main(os.path.join(RESULTS, "resource.json"))
+        _row("resource", (time.time() - t0) * 1e6,
+             f"sram_frac={res['data_engine']['sram_fraction_tofino2']:.4f}")
+
+    if want("scalability"):
+        from benchmarks import bench_scalability
+        t0 = time.time()
+        scales = ((1000, 0.5), (1000, 16.0)) if args.fast else \
+            ((1000, 0.5), (1000, 4.0), (1000, 16.0), (1000, 64.0),
+             (4000, 16.0), (8000, 16.0))
+        rows = bench_scalability.main(
+            os.path.join(RESULTS, "scalability.json"), scales=scales)
+        drop = (rows[0]["macro_f1"] - rows[-1]["macro_f1"]) \
+            / max(rows[0]["macro_f1"], 1e-9)
+        _row("scalability", (time.time() - t0) * 1e6,
+             f"f1_small={rows[0]['macro_f1']:.3f};"
+             f"f1_large={rows[-1]['macro_f1']:.3f};rel_drop={drop:.3f}")
+
+    if want("latency"):
+        from benchmarks import bench_latency
+        t0 = time.time()
+        res = bench_latency.main(os.path.join(RESULTS, "latency.json"))
+        us = res["fenix-cnn"]["fpga_cycle_model_us"]
+        _row("latency_fenix_cnn", us,
+             f"speedup_vs_ctrl={res['fenix-cnn']['speedup_vs_control_plane']:.0f}x")
+        _row("latency_fenix_rnn", res["fenix-rnn"]["fpga_cycle_model_us"],
+             f"tpu_roofline_us="
+             f"{res['fenix-rnn']['tpu_roofline']['latency_us']:.2f}")
+
+    if want("fairness"):
+        from benchmarks import bench_fairness
+        t0 = time.time()
+        rows = bench_fairness.main(os.path.join(RESULTS, "fairness.json"))
+        _row("fairness", (time.time() - t0) * 1e6,
+             f"max_rel_err={max(r['rel_err'] for r in rows):.3f}")
+
+    if want("roofline"):
+        from repro.launch import roofline
+        t0 = time.time()
+        try:
+            cells = roofline.load_cells("baseline")
+            ok = [c for c in cells if c.get("status") == "ok"]
+            if ok:
+                worst = min(ok, key=lambda c: c.get("useful_ratio", 1.0))
+                _row("roofline", (time.time() - t0) * 1e6,
+                     f"cells={len(ok)};worst_ratio="
+                     f"{worst['useful_ratio']:.2f}@"
+                     f"{worst['arch']}x{worst['shape']}")
+                with open(os.path.join(RESULTS, "roofline.json"), "w") as f:
+                    json.dump(cells, f, indent=1, default=str)
+        except Exception as e:  # dry-run artifacts absent
+            _row("roofline", 0.0, f"skipped({e})")
+
+
+if __name__ == "__main__":
+    main()

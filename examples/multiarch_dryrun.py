@@ -1,0 +1,37 @@
+"""Example 4: lower+compile any assigned arch on the production mesh and
+print its roofline terms — the multi-pod dry-run as a 10-line script.
+
+  PYTHONPATH=src python examples/multiarch_dryrun.py --arch llama3.2-1b \
+      --shape decode_32k --mesh multi
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+    # dryrun must own jax initialization (512 host devices)
+    from repro.launch.dryrun import run_cell
+    res = run_cell(args.arch, args.shape, args.mesh, {}, {})
+    print(f"status: {res['status']}  chips: {res.get('chips')}")
+    if res["status"] != "ok":
+        print(res.get("reason", res))
+        return
+    mem = res["memory"]
+    print(f"compile: {res['compile_s']}s, HLO lines: {res['hlo_lines']}")
+    print(f"per-device bytes: args {mem['argument_bytes']/1e9:.2f} GB, "
+          f"temp {mem['temp_bytes']/1e9:.2f} GB")
+    print(f"per-device flops: {res['cost']['flops']:.3e}")
+    print(f"collectives: {res['collectives']['per_op']}")
+
+
+if __name__ == "__main__":
+    main()

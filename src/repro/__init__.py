@@ -1,0 +1,5 @@
+"""repro: FENIX on TPU — public API surface."""
+
+from repro.configs import SHAPES, get_config, list_archs  # noqa: F401
+
+__version__ = "1.0.0"

@@ -1,0 +1,97 @@
+"""BoS [NSDI'24] baseline: binarized GRU on the switch.
+
+Per §7.1(h): the largest BoS variant — binarized GRU weights (+-1 via
+straight-through estimator), 6-bit embeddings, 9-bit fixed-point hidden
+states, 8 GRU units, embedding->GRU->output structure.  The binarization
+and the tiny hidden width are exactly what costs BoS accuracy vs FENIX's
+full-precision-trained INT8 models (Table 2 analysis).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.fenix_models import TrafficModelConfig
+from repro.models import traffic
+from repro.models.param import Registrar
+
+F32 = jnp.float32
+_UNITS = 8
+_EMB_BITS = 6
+_HID_BITS = 9
+
+
+def _binarize_ste(w: jax.Array) -> jax.Array:
+    """sign(w) with straight-through gradient."""
+    return w + jax.lax.stop_gradient(jnp.sign(w) - w)
+
+
+def _quant_ste(x: jax.Array, bits: int, amax: float) -> jax.Array:
+    scale = (2 ** (bits - 1) - 1) / amax
+    q = jnp.clip(jnp.round(x * scale), -(2 ** (bits - 1) - 1),
+                 2 ** (bits - 1) - 1) / scale
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def init(cfg: TrafficModelConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    reg = Registrar(abstract=False, seed=seed, dtype=F32)
+    e = cfg.embed_dim
+    reg.param("embed_len/table", (cfg.len_buckets, e), ("vocab", "embed"),
+              scale=0.5, dtype=F32)
+    reg.param("embed_ipd/table", (cfg.ipd_buckets, e), ("vocab", "embed"),
+              scale=0.5, dtype=F32)
+    d_in = 2 * e
+    for nm, shape in (("wz", (d_in + _UNITS, _UNITS)),
+                      ("wr", (d_in + _UNITS, _UNITS)),
+                      ("wh", (d_in + _UNITS, _UNITS))):
+        reg.param(f"gru/{nm}", shape, ("embed", "ffn"),
+                  scale=shape[0] ** -0.5, dtype=F32)
+    reg.param("head/w", (_UNITS, cfg.num_classes), ("embed", "classes"),
+              scale=_UNITS ** -0.5, dtype=F32)
+    reg.param("head/b", (cfg.num_classes,), ("classes",), init="zeros",
+              dtype=F32)
+    return reg.params
+
+
+def apply(params: Dict, cfg: TrafficModelConfig,
+          payload: jax.Array) -> jax.Array:
+    ids = traffic.bucketize(payload, cfg)
+    el = jnp.take(_quant_ste(params["embed_len/table"], _EMB_BITS, 1.0),
+                  ids[..., 0], axis=0)
+    ei = jnp.take(_quant_ste(params["embed_ipd/table"], _EMB_BITS, 1.0),
+                  ids[..., 1], axis=0)
+    x = jnp.concatenate([el, ei], axis=-1)            # [B,T,2E]
+    wz = _binarize_ste(params["gru/wz"])
+    wr = _binarize_ste(params["gru/wr"])
+    wh = _binarize_ste(params["gru/wh"])
+    scale = 1.0 / np.sqrt(x.shape[-1] + _UNITS)       # keep pre-acts sane
+
+    def cell(h, xt):
+        xa = jnp.concatenate([xt, h], axis=-1)
+        z = jax.nn.sigmoid(xa @ wz * scale)
+        r = jax.nn.sigmoid(xa @ wr * scale)
+        xa2 = jnp.concatenate([xt, r * h], axis=-1)
+        hh = jnp.tanh(xa2 @ wh * scale)
+        h2 = (1 - z) * h + z * hh
+        h2 = _quant_ste(h2, _HID_BITS, 1.0)           # 9-bit hidden states
+        return h2, None
+
+    h0 = jnp.zeros((x.shape[0], _UNITS), x.dtype)
+    h, _ = jax.lax.scan(cell, h0, x.swapaxes(0, 1))
+    return h @ params["head/w"] + params["head/b"]
+
+
+def loss_fn(params: Dict, cfg: TrafficModelConfig, batch: Dict
+            ) -> Tuple[jax.Array, Dict]:
+    logits = apply(params, cfg, batch["payload"])
+    labels = batch["label"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    w = batch.get("weight")
+    loss = jnp.mean(nll * w) if w is not None else jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(F32))
+    return loss, {"acc": acc}

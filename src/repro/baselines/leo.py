@@ -1,0 +1,44 @@
+"""Leo [NSDI'24] baseline: online decision tree at line rate.
+
+Per the paper's §7.1(g): a decision tree (deep, up to 1024 leaf nodes)
+on packet-length extremes and cumulative flow length, evaluated per packet
+from switch register state.  We fit a complete-tree CART of depth 10
+(= 1024 leaves) on the same prefix features Leo uses.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.common import flow_feature_matrix, flow_prefix_features
+from repro.core.data_engine.decision_tree import (TreeParams, fit_tree,
+                                                  predict, tree_arrays)
+from repro.data.synthetic_traffic import Flow
+
+# feature indices used by Leo: min_len, max_len, cum_len, pkt_cnt
+_LEO_FEATS = (0, 1, 3, 4)
+_DEPTH = 10
+
+
+class LeoModel:
+    def __init__(self, num_classes: int):
+        self.num_classes = num_classes
+        self.tree: TreeParams = None
+        self.arrs: Dict = None
+
+    def fit(self, flows: List[Flow], positions=(1, 3, 7, 15, 31)) -> None:
+        x, y, _ = flow_feature_matrix(flows, positions)
+        x = x[:, _LEO_FEATS].astype(np.int64)
+        self.tree = fit_tree(x, y, depth=_DEPTH,
+                             num_classes=self.num_classes)
+        self.arrs = tree_arrays(self.tree)
+
+    def predict_packets(self, flows: List[Flow], positions=(1, 3, 7, 15, 31)
+                        ) -> Dict[str, np.ndarray]:
+        xs, ys, fs = flow_feature_matrix(flows, positions)
+        x = jnp.asarray(xs[:, _LEO_FEATS].astype(np.int32))
+        pred = np.asarray(predict(self.arrs, x, _DEPTH))
+        return {"pred": pred, "label": ys, "flow": fs}

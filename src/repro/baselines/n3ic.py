@@ -1,0 +1,66 @@
+"""N3IC [NSDI'22] baseline: binary MLP on a SmartNIC.
+
+Per §7.1(i): binary-weight MLP with hidden layers [128, 64, 10] over
+flow-level + packet-level features.  (The paper simulates the NIC side in
+software due to hardware constraints; ours is the same simulation.)
+The NIC bottleneck FENIX's Fig. 1 highlights is throughput, not accuracy —
+N3IC's accuracy lands between the switch-tree methods and FENIX.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.bos import _binarize_ste
+from repro.baselines.common import flow_feature_matrix
+from repro.data.synthetic_traffic import Flow
+from repro.models.param import Registrar
+
+F32 = jnp.float32
+_HIDDEN = (128, 64, 10)
+
+
+def build_features(flows: List[Flow], positions=(3, 7, 15)
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    x, y, f = flow_feature_matrix(flows, positions)
+    # log-scale the magnitudes, z-score-free (NIC integer pipeline style)
+    x = np.log1p(np.abs(x)).astype(np.float32)
+    return x, y, f
+
+
+def init(n_features: int, num_classes: int, seed: int = 0) -> Dict:
+    reg = Registrar(abstract=False, seed=seed, dtype=F32)
+    prev = n_features
+    for i, h in enumerate(_HIDDEN):
+        reg.param(f"fc{i}/w", (prev, h), ("embed", "ffn"),
+                  scale=prev ** -0.5, dtype=F32)
+        reg.param(f"fc{i}/b", (h,), ("ffn",), init="zeros", dtype=F32)
+        prev = h
+    reg.param("head/w", (prev, num_classes), ("embed", "classes"),
+              scale=prev ** -0.5, dtype=F32)
+    reg.param("head/b", (num_classes,), ("classes",), init="zeros",
+              dtype=F32)
+    return reg.params
+
+
+def apply(params: Dict, x: jax.Array) -> jax.Array:
+    for i in range(len(_HIDDEN)):
+        w = _binarize_ste(params[f"fc{i}/w"])
+        scale = 1.0 / np.sqrt(w.shape[0])
+        x = jax.nn.relu(x @ w * scale + params[f"fc{i}/b"])
+    return x @ params["head/w"] + params["head/b"]
+
+
+def loss_fn(params: Dict, batch: Dict) -> Tuple[jax.Array, Dict]:
+    logits = apply(params, batch["payload"])
+    labels = batch["label"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    w = batch.get("weight")
+    loss = jnp.mean(nll * w) if w is not None else jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(F32))
+    return loss, {"acc": acc}

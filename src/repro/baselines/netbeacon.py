@@ -1,0 +1,67 @@
+"""NetBeacon [USENIX Sec'23] baseline: multi-phase tree models in the
+switch.
+
+Per §7.1(f): each phase is a Random Forest (3 trees, depth 7) evaluated at
+a packet-count checkpoint with flow-level register features; predictions
+update only at phase boundaries (the paper's noted limitation for
+fine-grained per-packet tasks).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.common import flow_feature_matrix
+from repro.core.data_engine.decision_tree import (fit_tree, predict,
+                                                  tree_arrays)
+from repro.data.synthetic_traffic import Flow
+
+_DEPTH = 7
+_N_TREES = 3
+_PHASES = (3, 7, 15)
+
+
+class NetBeaconModel:
+    def __init__(self, num_classes: int, seed: int = 0):
+        self.num_classes = num_classes
+        self.seed = seed
+        self.phase_forests: List[List[Dict]] = []
+
+    def fit(self, flows: List[Flow]) -> None:
+        rng = np.random.default_rng(self.seed)
+        self.phase_forests = []
+        for p in _PHASES:
+            x, y, _ = flow_feature_matrix(flows, positions=(p,))
+            x = x.astype(np.int64)
+            forest = []
+            for t in range(_N_TREES):
+                idx = rng.integers(0, len(y), len(y))   # bootstrap
+                tree = fit_tree(x[idx], y[idx], depth=_DEPTH,
+                                num_classes=self.num_classes)
+                forest.append(tree_arrays(tree))
+            self.phase_forests.append(forest)
+
+    def _forest_predict(self, forest, x: np.ndarray) -> np.ndarray:
+        votes = np.stack([np.asarray(predict(t, jnp.asarray(
+            x.astype(np.int32)), _DEPTH)) for t in forest])
+        out = np.empty(x.shape[0], np.int32)
+        for i in range(x.shape[0]):
+            out[i] = np.bincount(votes[:, i],
+                                 minlength=self.num_classes).argmax()
+        return out
+
+    def predict_packets(self, flows: List[Flow]) -> Dict[str, np.ndarray]:
+        """Per-checkpoint predictions (phase verdict holds until the next)."""
+        preds, labels, fids = [], [], []
+        for pi, p in enumerate(_PHASES):
+            x, y, f = flow_feature_matrix(flows, positions=(p,))
+            pr = self._forest_predict(self.phase_forests[pi], x)
+            preds.append(pr)
+            labels.append(y)
+            fids.append(f)
+        return {"pred": np.concatenate(preds),
+                "label": np.concatenate(labels),
+                "flow": np.concatenate(fids)}

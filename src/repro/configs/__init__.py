@@ -1,0 +1,19 @@
+from repro.configs.base import (  # noqa: F401
+    MoEConfig,
+    ModelConfig,
+    REDUCED,
+    REGISTRY,
+    SHAPES,
+    ShapeConfig,
+    SSMConfig,
+    HybridConfig,
+    get_config,
+    list_archs,
+    register,
+    shape_applicable,
+)
+from repro.configs.fenix_models import (  # noqa: F401
+    TrafficModelConfig,
+    fenix_cnn,
+    fenix_rnn,
+)

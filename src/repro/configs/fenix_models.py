@@ -1,0 +1,41 @@
+"""Configs for the paper's own traffic-analysis models (§7.1 schemes a/b/d/e).
+
+FENIX-CNN: 3 conv layers (64, 128, 256 filters) + 2 FC layers (512, 256).
+FENIX-RNN: embeddings + single custom RNN cell (128 units) + dense output.
+
+Features per the paper §6: sequences of packet lengths and inter-packet
+arrival times (protocol-agnostic), 8 buffered + 1 current = 9-step windows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficModelConfig:
+    name: str
+    kind: str                       # "cnn" | "rnn"
+    num_classes: int
+    seq_len: int = 9                # ring depth 8 + current feature (paper §4.3)
+    # feature vocabulary (embedding path; packet length / IPD are bucketized)
+    len_buckets: int = 64
+    ipd_buckets: int = 64
+    embed_dim: int = 16
+    # CNN
+    conv_filters: Tuple[int, ...] = (64, 128, 256)
+    conv_kernel: int = 3
+    fc_dims: Tuple[int, ...] = (512, 256)
+    # RNN
+    rnn_units: int = 128
+    # quantization (Model Engine is INT8; §6 "Model Training and Quantization")
+    quant_bits: int = 8
+
+
+def fenix_cnn(num_classes: int = 7) -> TrafficModelConfig:
+    return TrafficModelConfig(name="fenix-cnn", kind="cnn", num_classes=num_classes)
+
+
+def fenix_rnn(num_classes: int = 7) -> TrafficModelConfig:
+    return TrafficModelConfig(name="fenix-rnn", kind="rnn", num_classes=num_classes)

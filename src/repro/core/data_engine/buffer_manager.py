@@ -1,0 +1,52 @@
+"""Buffer Manager (§4.3): per-flow feature ring buffers + mirror packets.
+
+The buffer index increments and wraps by compare (the data plane cannot do
+modulo — §4.1 "Buffer Index Update").  On a Rate-Limiter grant the ring is
+read out in temporal order, the current packet's feature (F9, from packet
+metadata) is appended, and the assembled header is attached to a mirrored
+packet for the Model Engine.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.data_engine.state import EngineConfig
+
+I32 = jnp.int32
+
+
+def extract_feature(state: Dict, cfg: EngineConfig, slot, pkt,
+                    is_new) -> jax.Array:
+    """Per-packet feature vector: (packet length, inter-packet delay)."""
+    ipd = jnp.where(is_new, 0, pkt["ts_us"] - state["last_ts"][slot])
+    return jnp.stack([pkt["pkt_len"].astype(I32),
+                      jnp.maximum(ipd, 0).astype(I32)])
+
+
+def push(state: Dict, cfg: EngineConfig, slot, feat, ts) -> Dict:
+    """Write the feature into the flow's ring; advance buff_idx w/o modulo."""
+    s = dict(state)
+    idx = state["buff_idx"][slot]
+    s["ring"] = state["ring"].at[slot, idx].set(feat)
+    nxt = idx + 1
+    nxt = jnp.where(nxt == cfg.ring_depth, 0, nxt)   # wrap by compare
+    s["buff_idx"] = state["buff_idx"].at[slot].set(nxt)
+    s["last_ts"] = state["last_ts"].at[slot].set(ts.astype(I32))
+    return s
+
+
+def assemble(state: Dict, cfg: EngineConfig, slot, cur_feat) -> jax.Array:
+    """Mirror-packet payload: ring in temporal order + current feature (F9).
+
+    Reads buff_idx (the NEXT write position == oldest entry) and rolls the
+    ring so oldest..newest are contiguous, exactly Figure 7.
+    """
+    ring = state["ring"][slot]                       # [depth, feat]
+    idx = state["buff_idx"][slot]
+    order = jnp.mod(idx + jnp.arange(cfg.ring_depth), cfg.ring_depth)
+    seq = ring[order]                                # oldest..newest
+    return jnp.concatenate([seq, cur_feat[None]], axis=0)  # [depth+1, feat]

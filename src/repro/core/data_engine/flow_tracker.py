@@ -1,0 +1,75 @@
+"""Flow Tracker (§4.1): flow table lookup/update + windowed flow counting.
+
+Pure functions over the state dict; the per-packet composition lives in
+``engine.py``.  Collision policy: a packet whose slot holds a different hash
+evicts the resident flow (initializes the entry) — the paper's "checks
+whether the packet belongs to a new flow or is the result of a hash
+collision, and then initializes or updates the corresponding flow entry".
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.data_engine.state import EngineConfig, hash_five_tuple
+
+I32 = jnp.int32
+
+
+def lookup(state: Dict, cfg: EngineConfig, pkt: Dict) -> Tuple:
+    """Returns (slot, h, is_new, is_collision)."""
+    h = hash_five_tuple(pkt["src_ip"], pkt["dst_ip"], pkt["src_port"],
+                        pkt["dst_port"], pkt["proto"])
+    slot = (h & jnp.uint32(cfg.n_slots - 1)).astype(I32)
+    stored = state["hash"][slot]
+    empty = stored == jnp.uint32(0)
+    collision = (~empty) & (stored != h)
+    is_new = empty | collision
+    return slot, h, is_new, collision
+
+
+def on_packet(state: Dict, cfg: EngineConfig, slot, h, is_new, collision,
+              ts) -> Dict:
+    """Init-or-update the flow entry; maintain window flow counting."""
+    s = dict(state)
+    # (re)initialize on new flow / collision eviction
+    s["hash"] = state["hash"].at[slot].set(h)
+    s["bklog_n"] = state["bklog_n"].at[slot].set(
+        jnp.where(is_new, 0, state["bklog_n"][slot] + 1))
+    s["bklog_t"] = state["bklog_t"].at[slot].set(
+        jnp.where(is_new, ts, state["bklog_t"][slot]))
+    s["cls"] = state["cls"].at[slot].set(
+        jnp.where(is_new, -1, state["cls"][slot]))
+    s["pkt_cnt"] = state["pkt_cnt"].at[slot].set(
+        jnp.where(is_new, 1, state["pkt_cnt"][slot] + 1))
+    s["buff_idx"] = state["buff_idx"].at[slot].set(
+        jnp.where(is_new, 0, state["buff_idx"][slot]))
+    # window statistics: count flows whose first packet lands in this T_w
+    s["flow_cnt"] = state["flow_cnt"] + is_new.astype(I32)
+    s["win_pkt_cnt"] = state["win_pkt_cnt"] + 1
+    s["collisions"] = state["collisions"] + collision.astype(I32)
+    return s
+
+
+def window_reset(state: Dict, cfg: EngineConfig, now: jax.Array) -> Dict:
+    """Control-plane T_w rollover (§4.1 Flow Counting Mechanism): hash
+    registers and the flow counter are reset and recalculated."""
+    s = dict(state)
+    s["flow_cnt"] = jnp.asarray(0, I32)
+    s["win_pkt_cnt"] = jnp.asarray(0, I32)
+    s["win_start"] = now.astype(I32)
+    return s
+
+
+def apply_inference_result(state: Dict, slot, cls, h) -> Dict:
+    """Model Engine verdict returns to the switch (§5.1): write cls if the
+    slot still belongs to the same flow (hash check handles eviction races).
+    """
+    s = dict(state)
+    still_owner = state["hash"][slot] == h
+    s["cls"] = state["cls"].at[slot].set(
+        jnp.where(still_owner, cls, state["cls"][slot]))
+    return s

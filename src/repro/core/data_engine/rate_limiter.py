@@ -1,0 +1,70 @@
+"""Rate Limiter (§4.2): probabilistic token bucket, Algorithm 1.
+
+Integer-only data-plane math: the probability comes from the control-plane
+LUT (power-of-two binning => shift + clip), randomness is a 16-bit draw, the
+bucket holds microseconds of credit (cost = 1/V us per grant, cap = queue
+length * cost so bursts are absorbed without overflowing the queue).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.data_engine.state import EngineConfig
+
+I32 = jnp.int32
+
+
+def step(state: Dict, cfg: EngineConfig, slot, ts) -> Tuple[Dict, jax.Array]:
+    """Algorithm 1 for one packet. Returns (state', granted?)."""
+    s = dict(state)
+    # lines 1-5: refill by elapsed gap
+    first = state["t_last"] == 0
+    gap = jnp.where(first, 0, ts - state["t_last"])
+    s["t_last"] = ts.astype(I32)
+    bucket = jnp.minimum(state["bucket"] + gap, cfg.bucket_cap_us)
+    # line 6: rand + LUT probability on (T_i, C_i)
+    key, sub = jax.random.split(state["rng_key"])
+    s["rng_key"] = key
+    rand = jax.random.randint(sub, (), 0, 1 << cfg.lut.prob_bits, I32)
+    t_i = jnp.maximum(ts - state["bklog_t"][slot], 0)
+    c_i = jnp.maximum(state["bklog_n"][slot], 0)
+    ti_bin = jnp.clip(t_i >> cfg.lut.t_shift, 0, cfg.lut.t_bins - 1)
+    ci_bin = jnp.clip(c_i >> cfg.lut.c_shift, 0, cfg.lut.c_bins - 1)
+    prob = state["lut"][ti_bin, ci_bin]
+    selected = rand < prob
+    # lines 8-12: consume if selected and enough tokens
+    has_tokens = bucket >= cfg.cost_us
+    granted = selected & has_tokens
+    s["bucket"] = jnp.where(granted, bucket - cfg.cost_us, bucket).astype(I32)
+    # telemetry + per-flow backlog reset on grant
+    s["granted"] = state["granted"] + granted.astype(I32)
+    s["denied_prob"] = state["denied_prob"] + (~selected).astype(I32)
+    s["denied_tokens"] = state["denied_tokens"] \
+        + (selected & ~has_tokens).astype(I32)
+    s["bklog_n"] = s["bklog_n"].at[slot].set(
+        jnp.where(granted, 0, s["bklog_n"][slot]))
+    s["bklog_t"] = s["bklog_t"].at[slot].set(
+        jnp.where(granted, ts, s["bklog_t"][slot]))
+    return s, granted
+
+
+def control_plane_update(state: Dict, cfg: EngineConfig) -> Dict:
+    """Rebuild the LUT from the observed window statistics (N, Q).
+
+    This is the paper's 300-line control-plane Python component: it reads
+    Flow_cnt / Pkt_cnt from the switch each T_w and pushes a fresh table.
+    """
+    import numpy as np
+
+    from repro.core.probability import build_lut
+
+    n = max(float(state["flow_cnt"]), 1.0)
+    q = max(float(state["win_pkt_cnt"]), 1.0) / max(float(cfg.window_us), 1.0)
+    lut = build_lut(n=n, q=q, v=cfg.token_rate_per_us, cfg=cfg.lut)
+    s = dict(state)
+    s["lut"] = jnp.asarray(lut, I32)
+    return s

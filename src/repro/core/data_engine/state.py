@@ -1,0 +1,116 @@
+"""Data Engine state: the switch's SRAM tables as JAX arrays.
+
+Mirrors §4.1 Figure 3: a Flow Info Table keyed by truncated 5-tuple hash with
+fields {hash, bklog_n, bklog_t, class, buff_idx, pkt_cnt}; per-flow feature
+ring buffers (§4.3); token bucket + windowed global statistics (§4.2).
+
+All fields are integers — the data plane performs no float math, matching
+PISA's instruction set.  Timestamps are int32 microseconds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.probability import LUTConfig, build_lut, token_rate
+
+I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_slots_log2: int = 12          # flow table size = 2^k
+    ring_depth: int = 8             # F1..F8 (§4.3); current pkt is F9
+    feat_dim: int = 2               # (pkt_len, inter-packet delay)
+    # token bucket (§4.2): cost per feature-vector grant, in microseconds
+    fpga_hz: float = 75e6           # model engine service rate (Fig. 6)
+    link_bw_bytes: float = 12.5e9   # 100 Gbps switch<->FPGA channel
+    feat_bytes: int = 64            # W: mirrored packet payload
+    queue_len: int = 64             # bucket cap <= queue length (§4.2)
+    window_us: int = 1_000_000      # T_w statistics window
+    lut: LUTConfig = dataclasses.field(default_factory=LUTConfig)
+
+    @property
+    def n_slots(self) -> int:
+        return 1 << self.n_slots_log2
+
+    @property
+    def token_rate_per_us(self) -> float:
+        return token_rate(self.fpga_hz, self.link_bw_bytes,
+                          self.feat_bytes) / 1e6
+
+    @property
+    def cost_us(self) -> int:
+        """Token cost per grant = 1/V in us (integer, >=1)."""
+        return max(1, int(round(1.0 / self.token_rate_per_us)))
+
+    @property
+    def bucket_cap_us(self) -> int:
+        return self.queue_len * self.cost_us
+
+
+def init_state(cfg: EngineConfig, n_est: float = 1000.0,
+               q_est_pps: float = 1e6) -> Dict[str, jax.Array]:
+    """Fresh switch state + a control-plane LUT for (n_est, q_est)."""
+    n = cfg.n_slots
+    lut = build_lut(n=n_est, q=q_est_pps / 1e6,
+                    v=cfg.token_rate_per_us, cfg=cfg.lut)
+    return {
+        # Flow Info Table (§4.1)
+        "hash": jnp.zeros((n,), jnp.uint32),
+        "bklog_n": jnp.zeros((n,), I32),
+        "bklog_t": jnp.zeros((n,), I32),
+        "cls": jnp.full((n,), -1, I32),
+        "buff_idx": jnp.zeros((n,), I32),
+        "pkt_cnt": jnp.zeros((n,), I32),
+        "last_ts": jnp.zeros((n,), I32),
+        # Buffer Manager rings (§4.3)
+        "ring": jnp.zeros((n, cfg.ring_depth, cfg.feat_dim), I32),
+        # Rate Limiter (§4.2)
+        "bucket": jnp.asarray(cfg.bucket_cap_us, I32),
+        "t_last": jnp.asarray(0, I32),
+        "lut": jnp.asarray(lut, I32),
+        # windowed statistics (control plane resets each T_w)
+        "flow_cnt": jnp.asarray(0, I32),
+        "win_pkt_cnt": jnp.asarray(0, I32),
+        "win_start": jnp.asarray(0, I32),
+        # PRNG for probabilistic selection
+        "rng_key": jax.random.PRNGKey(0),
+        # telemetry
+        "granted": jnp.asarray(0, I32),
+        "denied_prob": jnp.asarray(0, I32),
+        "denied_tokens": jnp.asarray(0, I32),
+        "collisions": jnp.asarray(0, I32),
+    }
+
+
+def hash_five_tuple(src_ip, dst_ip, src_port, dst_port, proto):
+    """32-bit integer mix of the 5-tuple (stand-in for the switch CRC)."""
+    h = src_ip.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
+    h = h ^ (dst_ip.astype(jnp.uint32) * jnp.uint32(0x85EBCA77))
+    h = h ^ (src_port.astype(jnp.uint32) * jnp.uint32(0xC2B2AE3D))
+    h = h ^ (dst_port.astype(jnp.uint32) * jnp.uint32(0x27D4EB2F))
+    h = h ^ (proto.astype(jnp.uint32) * jnp.uint32(0x165667B1))
+    h = h ^ (h >> jnp.uint32(15))
+    h = h * jnp.uint32(0x2545F491)
+    h = h ^ (h >> jnp.uint32(13))
+    # hash value 0 is reserved for "empty slot"
+    return jnp.maximum(h, jnp.uint32(1))
+
+
+def make_packets(rng: np.random.Generator, n: int) -> Dict[str, np.ndarray]:
+    """Random packet batch skeleton (tests)."""
+    return {
+        "src_ip": rng.integers(0, 2**31, n, dtype=np.int64).astype(np.uint32),
+        "dst_ip": rng.integers(0, 2**31, n, dtype=np.int64).astype(np.uint32),
+        "src_port": rng.integers(0, 65536, n).astype(np.uint32),
+        "dst_port": rng.integers(0, 65536, n).astype(np.uint32),
+        "proto": rng.integers(6, 18, n).astype(np.uint32),
+        "ts_us": np.sort(rng.integers(0, 1_000_000, n)).astype(np.int32),
+        "pkt_len": rng.integers(40, 1500, n).astype(np.int32),
+    }

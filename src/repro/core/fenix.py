@@ -1,0 +1,165 @@
+"""FENIX end-to-end system: switch (Data Engine) + FPGA (Model Engine).
+
+Co-simulation of the asynchronous hybrid (§3, Figure 2):
+
+  packets --> Data Engine (flow tracking, probabilistic token bucket,
+              ring buffers) --> mirror packets --> Vector I/O FIFO -->
+              INT8 DNN inference --> (flow id, class) --> flow table cls
+
+The Model Engine serves at most ``service_rate`` inferences per simulated
+second (the paper's F in V=min(F, B/W)); results return to the switch with
+``loop_latency_us`` (PCB interconnect, Fig. 11: 1-3us).  Flows with a
+verdict are classified per-packet at line rate from the flow table; packets
+of unclassified flows fall back to the switch decision tree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.fenix_models import TrafficModelConfig
+from repro.core.data_engine import engine as de
+from repro.core.data_engine import rate_limiter as rl
+from repro.core.data_engine.state import EngineConfig, init_state
+from repro.core.model_engine import vector_io as vio
+from repro.core.model_engine.inference import EngineModel
+from repro.core.data_engine import flow_tracker as ft
+
+
+@dataclasses.dataclass
+class FenixConfig:
+    engine: EngineConfig = dataclasses.field(default_factory=EngineConfig)
+    io: vio.IOConfig = dataclasses.field(default_factory=vio.IOConfig)
+    batch_size: int = 512            # packets per data-engine step
+    loop_latency_us: int = 3         # switch->FPGA->switch (Fig. 11)
+    fast_mode: bool = True           # vectorized admission (simulator)
+    control_plane_every: int = 8     # LUT refresh cadence (batches)
+
+
+class FenixSystem:
+    """Stateful co-simulation wrapper.
+
+    ``oracle_windows``: optional (flow_feats_list) used in fast mode — the
+    vectorized data plane collapses same-flow packets within a batch, so the
+    simulator reconstructs each granted packet's ring window from ground
+    truth ((flow_idx, flow_pos) -> F1..F9), which is exactly the window the
+    sequential switch pipeline would hold.  Scan mode builds windows from
+    the simulated ring itself.
+    """
+
+    def __init__(self, cfg: FenixConfig, model: EngineModel,
+                 tree: Optional[Dict] = None, tree_depth: int = 4,
+                 oracle_windows: Optional[List[np.ndarray]] = None):
+        self.cfg = cfg
+        self.model = model
+        self.tree = tree
+        self.tree_depth = tree_depth
+        self.oracle = oracle_windows
+        self.state = init_state(cfg.engine)
+        self.queues = vio.init_queues(cfg.io)
+        self.stats = {"packets": 0, "granted": 0, "inferences": 0,
+                      "classified_pkts": 0, "tree_pkts": 0, "dropped_q": 0}
+        # in-flight inference results: (deliver_ts, slot, hash, cls)
+        self._inflight: List[Tuple[int, int, int, int]] = []
+
+    # -- one simulation step ------------------------------------------------
+    def step(self, packets: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        """Process one packet batch; returns per-packet verdicts + masks."""
+        cfg = self.cfg
+        n = len(packets["ts_us"])
+        batch = {k: jnp.asarray(v) for k, v in packets.items()
+                 if k in ("src_ip", "dst_ip", "src_port", "dst_port",
+                          "proto", "ts_us", "pkt_len")}
+        now = int(packets["ts_us"][-1])
+        # deliver finished inferences whose latency elapsed
+        self._deliver(now)
+        if cfg.fast_mode:
+            self.state, out = de.process_batch_fast(self.state, batch,
+                                                    cfg.engine)
+        else:
+            self.state, out = de.process_batch(self.state, batch, cfg.engine,
+                                               tree=self.tree,
+                                               tree_depth=self.tree_depth)
+        granted = np.asarray(out["granted"])
+        slots = np.asarray(out["slot"])[granted]
+        hashes = np.asarray(out["hash"])[granted]
+        feats = np.asarray(out["payload"])[granted]
+        if cfg.fast_mode and self.oracle is not None and \
+                "flow_idx" in packets:
+            from repro.data.synthetic_traffic import ring_window
+            fi = packets["flow_idx"][granted]
+            fp = packets["flow_pos"][granted]
+            win = feats.shape[1]
+            feats = np.stack([
+                ring_window(self.oracle[int(a)], int(b), win)
+                for a, b in zip(fi, fp)]) if len(fi) else feats
+        self.queues = vio.enqueue_batch(self.queues, cfg.io, slots, hashes,
+                                        feats)
+        # model engine serves a batch bounded by its service rate
+        span_us = max(int(packets["ts_us"][-1]) - int(packets["ts_us"][0]),
+                      1)
+        budget = max(1, int(cfg.engine.token_rate_per_us * span_us))
+        self.queues, s2, h2, f2 = vio.dequeue_batch(self.queues, cfg.io,
+                                                    budget)
+        if len(s2):
+            cls = np.asarray(self.model.infer(jnp.asarray(f2)))
+            for i in range(len(s2)):
+                self._inflight.append((now + cfg.loop_latency_us,
+                                       int(s2[i]), int(h2[i]), int(cls[i])))
+            self.stats["inferences"] += len(s2)
+        # verdicts: flow-table class (post-delivery) else switch tree
+        verdict = np.asarray(out["verdict"])
+        if self.tree is not None and cfg.fast_mode:
+            from repro.core.data_engine.decision_tree import predict
+            feats_now = np.stack([packets["pkt_len"],
+                                  np.zeros(n, np.int32)], axis=-1)
+            pre = np.asarray(predict(self.tree, jnp.asarray(feats_now),
+                                     self.tree_depth))
+            verdict = np.where(verdict >= 0, verdict, pre)
+            self.stats["tree_pkts"] += int(np.sum(np.asarray(
+                out["verdict"]) < 0))
+        self.stats["packets"] += n
+        self.stats["granted"] += int(granted.sum())
+        self.stats["classified_pkts"] += int(np.sum(verdict >= 0))
+        self.stats["dropped_q"] = int(self.queues["dropped"])
+        return {"verdict": verdict, "granted": granted,
+                "slot": np.asarray(out["slot"])}
+
+    def _deliver(self, now: int) -> None:
+        remain = []
+        for (t, slot, h, cls) in self._inflight:
+            if t <= now:
+                self.state = ft.apply_inference_result(
+                    self.state, jnp.asarray(slot),
+                    jnp.asarray(cls), jnp.asarray(h, jnp.uint32))
+            else:
+                remain.append((t, slot, h, cls))
+        self._inflight = remain
+
+    def control_plane(self) -> None:
+        """T_w rollover: LUT refresh from observed (N, Q) + window reset."""
+        self.state = rl.control_plane_update(self.state, self.cfg.engine)
+        self.state = ft.window_reset(self.state, self.cfg.engine,
+                                     self.state["t_last"])
+
+    # -- full-trace driver --------------------------------------------------
+    def run_trace(self, stream: Dict[str, np.ndarray],
+                  labels_by_flow: Optional[np.ndarray] = None
+                  ) -> Dict[str, np.ndarray]:
+        """Feed a packet stream; returns per-packet verdicts."""
+        cfg = self.cfg
+        n = len(stream["ts_us"])
+        verdicts = np.full(n, -1, np.int32)
+        for i, start in enumerate(range(0, n, cfg.batch_size)):
+            sl = slice(start, min(start + cfg.batch_size, n))
+            batch = {k: v[sl] for k, v in stream.items()}
+            out = self.step(batch)
+            verdicts[sl] = out["verdict"]
+            if (i + 1) % cfg.control_plane_every == 0:
+                self.control_plane()
+        return {"verdict": verdicts}

@@ -1,0 +1,88 @@
+"""DNN Inference Module (§5.2): INT8 CNN/RNN on the systolic GEMM.
+
+Executes the quantized traffic model (quant/quantize.py) over feature
+batches; every matmul/conv maps onto kernels/int8_matmul — the same
+"one systolic array, many layer types" structure as the FPGA.  A simple
+cycle model provides the latency/throughput numbers for the Figure 11
+microbenchmark: MACs / (array_width^2 * f_clk) plus a fixed pipeline fill.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.fenix_models import TrafficModelConfig
+from repro.quant.quantize import int8_apply
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineModel:
+    cfg: TrafficModelConfig
+    qparams: Dict
+    backend: str = "ref"         # "ref" (CPU sim) | "pallas" | "pallas_tpu"
+
+    def infer(self, payload: jax.Array) -> jax.Array:
+        """payload [B, T, 2] int32 -> class [B] int32."""
+        logits = int8_apply(self.qparams, self.cfg, payload,
+                            backend=self.backend)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def macs_per_inference(cfg: TrafficModelConfig) -> int:
+    """Multiply-accumulates for one feature window (cycle model input)."""
+    e = cfg.embed_dim
+    d_in = 2 * e
+    t = cfg.seq_len
+    total = 0
+    if cfg.kind == "cnn":
+        c_prev = d_in
+        for ch in cfg.conv_filters:
+            total += t * cfg.conv_kernel * c_prev * ch
+            c_prev = ch
+        f_prev = c_prev
+        for fc in cfg.fc_dims:
+            total += f_prev * fc
+            f_prev = fc
+        total += f_prev * cfg.num_classes
+    else:
+        u = cfg.rnn_units
+        total += t * (d_in * u + u * u)
+        total += u * cfg.num_classes
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class CycleModel:
+    """ZU19EG-style array: width x width INT8 MACs at f_clk."""
+    array_width: int = 32
+    f_clk_hz: float = 300e6
+    pipeline_fill_cycles: int = 64
+
+    def latency_us(self, cfg: TrafficModelConfig) -> float:
+        macs = macs_per_inference(cfg)
+        cycles = macs / (self.array_width ** 2) + self.pipeline_fill_cycles
+        return cycles / self.f_clk_hz * 1e6
+
+    def throughput_inf_per_s(self, cfg: TrafficModelConfig) -> float:
+        macs = macs_per_inference(cfg)
+        return self.f_clk_hz * self.array_width ** 2 / macs
+
+
+def tpu_latency_us(cfg: TrafficModelConfig, batch: int = 128) -> Dict:
+    """Roofline latency of the same window batch on one TPU v5e MXU.
+
+    compute = MACs*2 / 197 TFLOP/s (int8 runs at >= bf16 peak); memory =
+    weight+activation bytes / 819 GB/s.  Reported in the Fig. 11 analogue.
+    """
+    macs = macs_per_inference(cfg) * batch
+    flops = 2.0 * macs
+    w_bytes = macs_per_inference(cfg)  # int8: ~1 byte per unique MAC weight
+    t_compute = flops / 197e12 * 1e6
+    t_memory = (w_bytes + batch * cfg.seq_len * 2 * 4) / 819e9 * 1e6
+    return {"compute_us": t_compute, "memory_us": t_memory,
+            "latency_us": max(t_compute, t_memory)}

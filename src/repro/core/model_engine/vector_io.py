@@ -1,0 +1,78 @@
+"""Vector I/O Processor (§5.1): flow-identifier FIFO + result pairing.
+
+The FPGA parses mirror packets into (flow id, feature vector); ids wait in a
+FIFO while vectors run through the DNN; completed inferences are paired with
+the id at the FIFO head and shipped back to the switch.  FIFOs are fixed
+arrays + head/tail counters (the asynchronous-FIFO clock-domain decoupling
+becomes explicit queue state in the co-simulation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class IOConfig:
+    queue_len: int = 1024
+    feat_len: int = 9
+    feat_dim: int = 2
+
+
+def init_queues(cfg: IOConfig) -> Dict[str, jax.Array]:
+    return {
+        "id_q_slot": jnp.zeros((cfg.queue_len,), I32),
+        "id_q_hash": jnp.zeros((cfg.queue_len,), jnp.uint32),
+        "feat_q": jnp.zeros((cfg.queue_len, cfg.feat_len, cfg.feat_dim),
+                            I32),
+        "head": jnp.asarray(0, I32),
+        "tail": jnp.asarray(0, I32),
+        "dropped": jnp.asarray(0, I32),
+    }
+
+
+def enqueue_batch(q: Dict, cfg: IOConfig, slots: np.ndarray,
+                  hashes: np.ndarray, feats: np.ndarray) -> Dict:
+    """Host-side co-sim: append granted mirror packets; drop on overflow."""
+    head, tail = int(q["head"]), int(q["tail"])
+    cap = cfg.queue_len
+    out = {k: np.array(v) for k, v in q.items()}  # writable copies
+    dropped = int(q["dropped"])
+    for i in range(len(slots)):
+        if tail - head >= cap:
+            dropped += 1
+            continue
+        pos = tail % cap
+        out["id_q_slot"][pos] = slots[i]
+        out["id_q_hash"][pos] = hashes[i]
+        out["feat_q"][pos] = feats[i]
+        tail += 1
+    out["head"], out["tail"] = head, tail
+    out["dropped"] = dropped
+    return {k: jnp.asarray(v) for k, v in out.items()}
+
+
+def dequeue_batch(q: Dict, cfg: IOConfig, n: int
+                  ) -> Tuple[Dict, np.ndarray, np.ndarray, np.ndarray]:
+    """Pop up to n entries in FIFO order (ordering invariant of §5.1)."""
+    head, tail = int(q["head"]), int(q["tail"])
+    take = min(n, tail - head)
+    cap = cfg.queue_len
+    idx = (head + np.arange(take)) % cap
+    slots = np.asarray(q["id_q_slot"])[idx]
+    hashes = np.asarray(q["id_q_hash"])[idx]
+    feats = np.asarray(q["feat_q"])[idx]
+    out = dict(q)
+    out["head"] = jnp.asarray(head + take, I32)
+    return out, slots, hashes, feats
+
+
+def occupancy(q: Dict) -> int:
+    return int(q["tail"]) - int(q["head"])

@@ -1,0 +1,97 @@
+"""FENIX token-generation probability model (paper Eq. 2 + Appendix A).
+
+Control-plane math (floats allowed here, as in the paper — the switch only
+ever sees the discretized lookup table built by ``build_lut``).
+
+Variables (Table 5):
+  V   token generation rate        = min(F, B/W)    [tokens/s]
+  Q   global packet rate           [pkts/s]
+  N   number of active flows
+  T_i time since flow i last transmitted features   [s]
+  C_i packets of flow i backlogged during T_i
+  Q_i = C_i / T_i   current flow packet rate
+
+Criterion 1: equal-rate flows get expected transmission period N/V.
+Criterion 2: heterogeneous rates get period Q/(Q_i V) (rate-proportional).
+Appendix A proves the rate-weighted mean period is exactly N/V.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+def token_rate(fpga_hz: float, link_bw_bytes: float, feat_bytes: int) -> float:
+    """Eq. 1: V = min(F, B/W)."""
+    return min(fpga_hz, link_bw_bytes / max(feat_bytes, 1))
+
+
+def probability(t: np.ndarray, c: np.ndarray, n: float, q: float,
+                v: float) -> np.ndarray:
+    """Eq. 2, vectorized and clipped to [0,1].
+
+    The two linear pieces meet the boundary conditions:
+      P=0 while T_i < min(N/V, Q/(Q_i V)) and P=1 past max(...).
+    ``QT == NC`` (flow exactly at the mean rate) degenerates to the step at
+    N/V (cases 3/4).
+    """
+    t = np.asarray(t, dtype=np.float64)
+    c = np.maximum(np.asarray(c, dtype=np.float64), 1e-12)
+    qt = q * t
+    nc = n * c
+    denom = qt - nc
+    # case QT > NC  (flow slower than average): ramp on [N/V, Q/(Q_i V)]
+    slow = c * (v * t - n) / np.where(np.abs(denom) < 1e-9, np.inf, denom)
+    # case QT < NC  (flow faster than average): ramp on [Q/(Q_i V), N/V]
+    fast = t * (v * c - q) / np.where(np.abs(denom) < 1e-9, np.inf, -denom)
+    p = np.where(denom > 1e-9, slow, np.where(denom < -1e-9, fast,
+                 (t >= n / v).astype(np.float64)))
+    return np.clip(p, 0.0, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class LUTConfig:
+    """Power-of-two binning so the data plane needs only shifts + clips."""
+    t_shift: int = 10          # T bin width = 2^t_shift microseconds
+    c_shift: int = 0           # C bin width = 2^c_shift packets
+    t_bins: int = 64
+    c_bins: int = 32
+    prob_bits: int = 16        # probabilities quantized to [0, 2^16)
+
+
+def build_lut(n: float, q: float, v: float,
+              cfg: LUTConfig = LUTConfig()) -> np.ndarray:
+    """Discretize Eq. 2 into a [t_bins, c_bins] integer LUT (control plane).
+
+    Entry [i, j] = P(T = (i + 0.5) * 2^t_shift us, C = (j + 0.5) * 2^c_shift)
+    scaled to [0, 2^prob_bits).  q, v in pkts/us; n dimensionless.
+    """
+    ti = (np.arange(cfg.t_bins) + 0.5) * (1 << cfg.t_shift)
+    cj = (np.arange(cfg.c_bins) + 0.5) * (1 << cfg.c_shift)
+    tt, cc = np.meshgrid(ti, cj, indexing="ij")
+    p = probability(tt, cc, n=n, q=q, v=v)
+    return np.round(p * ((1 << cfg.prob_bits) - 1)).astype(np.int32)
+
+
+def lut_lookup_np(lut: np.ndarray, t_us: np.ndarray, c: np.ndarray,
+                  cfg: LUTConfig = LUTConfig()) -> np.ndarray:
+    """Reference integer-only lookup (what the switch pipeline does)."""
+    ti = np.clip(np.asarray(t_us) >> cfg.t_shift, 0, cfg.t_bins - 1)
+    cj = np.clip(np.asarray(c) >> cfg.c_shift, 0, cfg.c_bins - 1)
+    return lut[ti, cj]
+
+
+def expected_period(qi: float, n: float, q: float, v: float) -> float:
+    """Appendix A Eq. 6: E_i = (Q_i N + Q) / (2 Q_i V)."""
+    return (qi * n + q) / (2.0 * qi * v)
+
+
+def mean_period_over_flows(rates: np.ndarray, n: float, q: float,
+                           v: float) -> float:
+    """Appendix A Eq. 7-11: rate-weighted mean == N/V."""
+    rates = np.asarray(rates, dtype=np.float64)
+    return float(np.sum(rates * np.array(
+        [expected_period(r, n, q, v) for r in rates])) / q)

@@ -1,0 +1,62 @@
+"""INT8 gradient compression with error feedback (1000-node DP trick).
+
+Before the data-parallel all-reduce, each gradient tensor is quantized to
+int8 with a per-tensor scale; the quantization residual is carried into the
+next step (error feedback), which provably preserves SGD convergence.  The
+all-reduce then moves 4x fewer bytes (the §Roofline collective term of the
+train cells is dominated by exactly this all-reduce).
+
+On this CPU container the collective itself is GSPMD-inserted; the
+quantize->(all-reduce)->dequantize round trip is what we implement and test
+numerically here (compress_decompress), and it drops into the train step
+via TrainerConfig.grad_compression.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass
+class CompressedState:
+    error: Dict[str, jax.Array]
+
+    @staticmethod
+    def init(params: Dict[str, Any]) -> "CompressedState":
+        return CompressedState(
+            error={k: jnp.zeros(v.shape, F32) for k, v in params.items()})
+
+
+def quantize_grad(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_grad(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(F32) * scale
+
+
+def compress_decompress(grads: Dict[str, Any], state: CompressedState
+                        ) -> Tuple[Dict[str, Any], CompressedState]:
+    """Error-feedback int8 round trip applied per tensor."""
+    new_g, new_e = {}, {}
+    for k, g in grads.items():
+        g32 = g.astype(F32) + state.error[k]
+        q, scale = quantize_grad(g32)
+        deq = dequantize_grad(q, scale)
+        new_g[k] = deq.astype(g.dtype)
+        new_e[k] = g32 - deq
+    return new_g, CompressedState(error=new_e)
+
+
+jax.tree_util.register_pytree_node(
+    CompressedState,
+    lambda s: ((s.error,), None),
+    lambda _, c: CompressedState(error=c[0]))

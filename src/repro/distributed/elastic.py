@@ -1,0 +1,68 @@
+"""Elastic scaling: remesh a checkpoint onto a different device count.
+
+Checkpoints are mesh-agnostic full arrays (train/checkpoint.py), so elastic
+scale-up/down is: load -> build new mesh + rules -> compute new pspecs ->
+device_put with the new NamedShardings.  ``plan_remesh`` also validates
+divisibility and reports which logical axes fall back (the same
+divisibility guard as model construction), so a scheduler can reject an
+invalid target mesh before draining the old job.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.models.param import sharding_ctx, spec_for, tree_pspecs
+
+
+@dataclasses.dataclass
+class RemeshPlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    pspecs: Dict[str, P]
+    fallbacks: list
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(self.mesh_shape))
+
+
+def plan_remesh(cfg: ModelConfig, mesh: Mesh,
+                rules: Optional[Dict] = None) -> RemeshPlan:
+    """Dry-plan: pspecs + fallback report for the target mesh."""
+    params, axes = api.init_params(cfg, abstract=True)
+    with sharding_ctx(mesh, rules) as ctx:
+        specs = tree_pspecs(params, axes, mesh)
+        fallbacks = list(ctx.fallbacks)
+    shape = tuple(mesh.shape[a] for a in mesh.axis_names)
+    return RemeshPlan(shape, tuple(mesh.axis_names), specs, fallbacks)
+
+
+def reshard_state(state: Dict[str, Any], plan: RemeshPlan,
+                  mesh: Mesh) -> Dict[str, Any]:
+    """Place a (host) checkpoint state onto the new mesh's shardings."""
+    out = {}
+    for k, v in state.items():
+        spec = plan.pspecs.get(k, P())
+        out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+    return out
+
+
+def scale_step_capacity(old_devices: int, new_devices: int,
+                        global_batch: int) -> Tuple[int, int]:
+    """Keep global batch fixed; recompute per-device batch + grad-accum.
+
+    Returns (per_device_batch, accum_steps): if the new fleet cannot divide
+    the global batch evenly, gradient accumulation keeps semantics stable
+    (the 1000-node elastic policy: same tokens/step across scale events).
+    """
+    per = max(1, global_batch // new_devices)
+    accum = max(1, int(np.ceil(global_batch / (per * new_devices))))
+    return per, accum

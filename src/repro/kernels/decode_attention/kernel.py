@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: GQA decode attention with KV streamed HBM->VMEM.
+
+Serving hot spot for every assigned LM arch (decode_32k / long_500k are
+memory-bound on exactly this KV read).  Design:
+
+  grid = (B, Hkv, S/ck) — KV chunks innermost so the online-softmax
+  accumulators (m, l, acc) persist in VMEM scratch across the KV loop.
+
+  q tile    (1, G, D)        resident (one batch row, one kv-head group)
+  k/v tiles (1, ck, D)       streamed chunks of the cache
+  scratch   m,l (G,), acc (G, D) fp32
+  out       (1, G, D)        written at the last chunk
+
+Chunk masking uses the per-row length from SMEM; fully-masked chunks cost
+one skipped block (predicated write) — on real TPU the DMA is still issued,
+so pick ck to balance VMEM vs bandwidth (1024 default: 2*ck*D*2B ~ 0.5MB
+per head at D=128).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, ck: int, n_chunks: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(F32)                     # [G, D]
+    k = k_ref[0, 0].astype(F32)                     # [ck, D]
+    v = v_ref[0, 0].astype(F32)                     # [ck, D]
+    length = len_ref[b]
+    kpos = j * ck + jax.lax.broadcasted_iota(jnp.int32, (1, ck), 1)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32) * scale  # [G, ck]
+    s = jnp.where(kpos < length, s, -jnp.inf)
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+    m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(jnp.isinf(s), 0.0, p)
+    corr = jnp.exp(jnp.where(jnp.isinf(m_old), 0.0, m_old) - m_safe)
+    corr = jnp.where(jnp.isinf(m_old), 0.0, corr)
+    m_ref[...] = m_new
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32)
+
+    @pl.when(j == n_chunks - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("ck", "interpret"))
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            lengths: jax.Array, ck: int = 1024,
+                            interpret: bool = True) -> jax.Array:
+    """q [B,Hq,D]; k,v [B,S,Hkv,D] (S % ck == 0); lengths [B] int32."""
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    assert s % ck == 0, (s, ck)
+    g = hq // hkv
+    n_chunks = s // ck
+    qg = q.reshape(b, hkv, g, d)
+    # layout [B, Hkv, S, D] so the kv chunk is the contiguous minor block
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    grid = (b, hkv, n_chunks)
+    out = pl.pallas_call(
+        functools.partial(_kernel, ck=ck, n_chunks=n_chunks,
+                          scale=d ** -0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),     # lengths, full
+            pl.BlockSpec((1, 1, g, d), lambda bb, h, j: (bb, h, 0, 0)),
+            pl.BlockSpec((1, 1, ck, d), lambda bb, h, j: (bb, h, j, 0)),
+            pl.BlockSpec((1, 1, ck, d), lambda bb, h, j: (bb, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bb, h, j: (bb, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), v.dtype),
+        scratch_shapes=[pltpu.VMEM((g,), F32), pltpu.VMEM((g,), F32),
+                        pltpu.VMEM((g, d), F32)],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, kt, vt)
+    return out.reshape(b, hq, d)

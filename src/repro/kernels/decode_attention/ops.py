@@ -1,0 +1,36 @@
+"""jit'd wrapper for GQA decode attention: backend switch + padding."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+_BACKEND = "ref"
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("ref", "pallas", "pallas_tpu")
+    _BACKEND = name
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, ck: int = 1024,
+                     backend: Optional[str] = None) -> jax.Array:
+    """q [B,Hq,D]; k,v [B,S,Hkv,D]; lengths [B] -> [B,Hq,D]."""
+    backend = backend or _BACKEND
+    if backend == "ref":
+        return decode_attention_ref(q, k, v, lengths)
+    s = k.shape[1]
+    ck = min(ck, s)
+    pad = (-s) % ck
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return decode_attention_pallas(q, k, v, lengths, ck=ck,
+                                   interpret=(backend == "pallas"))

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lengths: jax.Array) -> jax.Array:
+    """q [B,Hq,D]; k,v [B,S,Hkv,D]; lengths [B] -> out [B,Hq,D]."""
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg.astype(F32), k.astype(F32))
+    scores = scores * (d ** -0.5)
+    mask = jnp.arange(s)[None, :] < lengths[:, None]
+    scores = jnp.where(mask[:, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(F32))
+    return out.reshape(b, hq, d).astype(v.dtype)

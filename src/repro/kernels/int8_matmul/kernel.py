@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: INT8 GEMM with int32 accumulation + pow2 requant.
+
+The FENIX Model Engine's "Neural Computing Array" is a systolic array for
+INT8 matrix ops (§5.2).  The TPU MXU *is* a 128x128 systolic array with
+native int8 multipliers, so the mapping is direct:
+
+  grid = (M/bm, N/bn, K/bk), K innermost so the int32 accumulator tile
+  lives in VMEM scratch across the K loop (revisiting pattern).
+
+  A tile (bm, bk) int8   - VMEM, streamed along K
+  B tile (bk, bn) int8   - VMEM, streamed along K
+  acc  (bm, bn) int32    - VMEM scratch, zeroed at k==0
+  out  (bm, bn)          - written at k==K-1, optionally requantized by
+                           (acc + bias) >> shift -> int8 (bias tile (1,bn))
+
+Block shapes default to MXU-aligned 128 multiples (int8 wants (32,128)
+minimum tiles; 128/256 chosen for >=50% MXU utilization at small M).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+I32 = jnp.int32
+
+
+def _kernel(a_ref, b_ref, bias_ref, out_ref, acc_ref, *, n_k: int,
+            shift: Optional[int], out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=I32)
+
+    @pl.when(k == n_k - 1)
+    def _write():
+        acc = acc_ref[...]
+        if bias_ref is not None:
+            acc = acc + bias_ref[...].astype(I32)
+        if shift is None:
+            out_ref[...] = acc.astype(out_dtype)
+        else:
+            if shift > 0:
+                acc = (acc + (1 << (shift - 1))) >> shift
+            out_ref[...] = jnp.clip(acc, -127, 127).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "shift",
+                                             "interpret"))
+def int8_matmul_pallas(a: jax.Array, b: jax.Array,
+                       bias: Optional[jax.Array] = None,
+                       shift: Optional[int] = None,
+                       bm: int = 128, bn: int = 128, bk: int = 128,
+                       interpret: bool = True) -> jax.Array:
+    """a [M,K] int8, b [K,N] int8; M,N,K must be multiples of the blocks.
+
+    interpret=True runs the kernel body on CPU (this container); on real
+    TPU pass interpret=False.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        (a.shape, b.shape, bm, bn, bk)
+    out_dtype = jnp.int8 if shift is not None else I32
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    args = [a, b]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        args.append(bias.reshape(1, n).astype(I32))
+        kern = functools.partial(_kernel, n_k=n_k, shift=shift,
+                                 out_dtype=out_dtype)
+    else:
+        def kern(a_ref, b_ref, out_ref, acc_ref):
+            return _kernel(a_ref, b_ref, None, out_ref, acc_ref, n_k=n_k,
+                           shift=shift, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), I32)],
+        interpret=interpret,
+    )(*args)

@@ -1,0 +1,76 @@
+"""jit'd public wrapper for the INT8 GEMM: padding, backend switch, vmap.
+
+``int8_matmul(a, b, ...)`` pads M/N/K up to block multiples, dispatches to
+the Pallas kernel (interpret=True on CPU, compiled on real TPU) or the
+pure-jnp reference (the default for CPU simulation speed), and slices the
+result back.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.int8_matmul.kernel import int8_matmul_pallas
+from repro.kernels.int8_matmul.ref import int8_matmul_ref
+
+_BACKEND = "ref"  # "ref" | "pallas" | "pallas_tpu"
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("ref", "pallas", "pallas_tpu")
+    _BACKEND = name
+
+
+def _pad(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def int8_matmul(a: jax.Array, b: jax.Array,
+                bias: Optional[jax.Array] = None,
+                shift: Optional[int] = None,
+                backend: Optional[str] = None) -> jax.Array:
+    """a [M,K] int8 @ b [K,N] int8 -> [M,N] int32 (int8 when shift given)."""
+    backend = backend or _BACKEND
+    m, k = a.shape
+    _, n = b.shape
+    if backend == "ref":
+        return int8_matmul_ref(a, b, bias=bias, shift=shift)
+    bm = bn = bk = 128
+    ap = _pad(a, bm, bk)
+    bp = _pad(b, bk, bn)
+    biasp = None
+    if bias is not None:
+        biasp = jnp.pad(bias, (0, (-n) % bn))
+    out = int8_matmul_pallas(ap, bp, bias=biasp, shift=shift,
+                             bm=bm, bn=bn, bk=bk,
+                             interpret=(backend == "pallas"))
+    return out[:m, :n]
+
+
+def int8_conv1d(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
+                shift: Optional[int], backend: Optional[str] = None
+                ) -> jax.Array:
+    """Causal-free 'same' conv1d as im2col onto the systolic GEMM.
+
+    x [B,S,Cin] int8, w [K,Cin,Cout] int8 -> [B,S,Cout].
+    The paper runs Conv layers on the same systolic array as FC (§5.2) —
+    im2col is exactly that mapping.
+    """
+    bsz, s, cin = x.shape
+    kk, _, cout = w.shape
+    pad = kk // 2
+    xp = jnp.pad(x, ((0, 0), (pad, kk - 1 - pad), (0, 0)))
+    cols = jnp.stack([xp[:, i:i + s] for i in range(kk)], axis=2)
+    a = cols.reshape(bsz * s, kk * cin)
+    bmat = w.reshape(kk * cin, cout)
+    y = int8_matmul(a, bmat, bias=bias, shift=shift, backend=backend)
+    return y.reshape(bsz, s, cout)

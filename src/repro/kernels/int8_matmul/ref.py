@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the INT8 systolic GEMM (FENIX Model Engine §5.2).
+
+Semantics: C = A(int8) @ B(int8) accumulated in int32, optionally
+requantized to int8 by  clip((acc + bias) >> shift)  — power-of-two
+fixed-point rescaling, matching the paper's "different decimal point
+positions to different layers" quantization.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(a: jax.Array, b: jax.Array,
+                    bias: Optional[jax.Array] = None,
+                    shift: Optional[int] = None) -> jax.Array:
+    """a [M,K] int8, b [K,N] int8 -> int32 [M,N] (or int8 if shift given)."""
+    assert a.dtype == jnp.int8 and b.dtype == jnp.int8
+    acc = jnp.dot(a.astype(jnp.int32), b.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.int32)[None, :]
+    if shift is None:
+        return acc
+    # rounding shift (round-half-up in fixed point), then saturate to int8
+    rounded = (acc + (1 << (shift - 1))) >> shift if shift > 0 else acc
+    return jnp.clip(rounded, -127, 127).astype(jnp.int8)

@@ -1,0 +1,56 @@
+"""jit'd wrapper for the rate gate: backend switch, padding, rand supply.
+
+In ``ref`` mode the caller supplies random bits (jax.random) so results are
+bit-exact reproducible; in pallas modes the on-core PRNG generates them.
+The *selection* distribution is identical (uniform 16-bit threshold).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rate_gate.kernel import rate_gate_pallas
+from repro.kernels.rate_gate.ref import rate_gate_ref
+
+_BACKEND = "ref"
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("ref", "pallas", "pallas_tpu")
+    _BACKEND = name
+
+
+def rate_gate(t_i: jax.Array, c_i: jax.Array, lut: jax.Array,
+              *, rand16: Optional[jax.Array] = None,
+              seed: Optional[jax.Array] = None,
+              t_shift: int = 10, c_shift: int = 0, prob_bits: int = 16,
+              backend: Optional[str] = None) -> jax.Array:
+    backend = backend or _BACKEND
+    n = t_i.shape[0]
+    if backend == "ref":
+        assert rand16 is not None
+        return rate_gate_ref(t_i, c_i, lut, rand16, t_shift, c_shift)
+    tile = 256
+    pad = (-n) % tile
+    if pad:
+        t_i = jnp.pad(t_i, (0, pad))
+        c_i = jnp.pad(c_i, (0, pad))
+    use_tpu_prng = backend == "pallas_tpu"
+    if rand16 is None and not use_tpu_prng:
+        key = jax.random.PRNGKey(int(seed) if seed is not None else 0)
+        rand16 = jax.random.randint(key, (t_i.shape[0],), 0,
+                                    1 << prob_bits, jnp.int32)
+    elif rand16 is not None and pad:
+        rand16 = jnp.pad(rand16, (0, pad))
+    sel = rate_gate_pallas(t_i, c_i, lut,
+                           seed if seed is not None else jnp.zeros((), jnp.int32),
+                           rand16=rand16,
+                           t_shift=t_shift, c_shift=c_shift,
+                           prob_bits=prob_bits, tile=tile,
+                           interpret=(backend == "pallas"),
+                           use_tpu_prng=use_tpu_prng)
+    return sel[:n].astype(bool)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the Rate-Limiter gate (LUT lookup + threshold).
+
+The vectorizable core of Algorithm 1 lines 6-8: bin (T_i, C_i) with shifts,
+look up the probability, compare with a uniform 16-bit draw.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rate_gate_ref(t_i: jax.Array, c_i: jax.Array, lut: jax.Array,
+                  rand16: jax.Array, t_shift: int, c_shift: int
+                  ) -> jax.Array:
+    """t_i/c_i/rand16 [N] int32; lut [TB,CB] int32 -> selected [N] bool."""
+    tb, cb = lut.shape
+    ti = jnp.clip(t_i >> t_shift, 0, tb - 1)
+    ci = jnp.clip(c_i >> c_shift, 0, cb - 1)
+    prob = lut[ti, ci]
+    return rand16 < prob

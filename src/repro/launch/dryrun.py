@@ -1,0 +1,394 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+mesh, with 512 placeholder host devices (the two lines above MUST stay first).
+
+For each cell this produces:
+  - proof of compile (sharding coherence) on (16,16) and (2,16,16) meshes
+  - memory_analysis()  — per-device bytes (fits / doesn't fit)
+  - cost_analysis()    — HLO FLOPs + bytes for the roofline terms
+  - collective bytes   — parsed from the post-SPMD HLO text
+written as JSON under benchmarks/results/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k --mesh single [--set attention_impl=chunked] \
+      [--rule expert_cap=data] [--out results.json]
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, shape_applicable
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.models import api
+from repro.models.param import (sharding_ctx, sharding_fallbacks, spec_for,
+                                tree_pspecs)
+from repro.train import optimizer as opt_lib
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def op_byte_histogram(hlo_text: str, top: int = 24) -> Dict[str, float]:
+    """Result bytes per HLO opcode (per-device). Used to adjust the memory
+    roofline term: XLA:CPU materializes bf16->f32 ``convert``s around every
+    dot (no native bf16 GEMM) and dus ``copy``s that TPU's native-bf16 MXU
+    and donation elide — those bytes are a backend artifact, not HBM
+    traffic the TPU would see."""
+    import collections
+    sizes: Dict[str, float] = collections.Counter()
+    for m in re.finditer(r"=\s*(\w+)\[([0-9,]*)\][^ ]*\s+([a-z][a-z0-9\-.]*)",
+                         hlo_text):
+        dt, dims, op = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        sizes[op] += n * _DTYPE_BYTES[dt]
+    return dict(collections.Counter(sizes).most_common(top))
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Any]:
+    """Sum operand bytes of every collective op in a post-SPMD HLO module.
+
+    Shapes in the partitioned module are per-device, so the totals here are
+    per-device bytes moved over ICI; multiply by chip count for global.
+    """
+    # name -> result type string (first occurrence of "%name = <type>")
+    def_types: Dict[str, str] = {}
+    def_re = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*([^=]+?)\s+"
+                        r"([a-z][a-z0-9\-]*)\(")
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = def_re.match(ln)
+        if m:
+            def_types[m.group(1)] = m.group(2)
+    per_op: Dict[str, Dict[str, float]] = {}
+    for ln in lines:
+        m = def_re.match(ln)
+        if not m:
+            continue
+        op = m.group(3)
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):  # -start/-done variants
+                base = c
+                break
+        if base is None or op.endswith("-done"):
+            continue
+        # operand names: %name tokens inside the call parens
+        call = ln[m.end():]
+        operand_bytes = 0
+        for nm in re.findall(r"%([\w.\-]+)", call):
+            t = def_types.get(nm)
+            if t:
+                operand_bytes += _type_bytes(t)
+        if operand_bytes == 0:  # fall back to result size
+            operand_bytes = _type_bytes(m.group(2))
+        d = per_op.setdefault(base, {"count": 0, "bytes": 0.0})
+        d["count"] += 1
+        d["bytes"] += operand_bytes
+    total = sum(d["bytes"] for d in per_op.values())
+    return {"per_op": per_op, "total_bytes": total}
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def apply_overrides(cfg, overrides: Dict[str, str]):
+    for key, val in overrides.items():
+        parts = key.split(".")
+        def parse(v):
+            for cast in (int, float):
+                try:
+                    return cast(v)
+                except ValueError:
+                    pass
+            if v in ("true", "false", "True", "False"):
+                return v.lower() == "true"
+            return v
+        v = parse(val)
+        if len(parts) == 1:
+            cfg = dataclasses.replace(cfg, **{parts[0]: v})
+        elif len(parts) == 2:
+            sub = getattr(cfg, parts[0])
+            cfg = dataclasses.replace(
+                cfg, **{parts[0]: dataclasses.replace(sub, **{parts[1]: v})})
+        else:
+            raise ValueError(key)
+    return cfg
+
+
+
+def _ns(mesh, tree):
+    """Wrap a PartitionSpec pytree in NamedShardings for this mesh."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+def build_lowered(cfg, shape, mesh, rules: Optional[Dict] = None):
+    """Returns (lowered, meta). Must be called inside sharding_ctx."""
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    if shape.global_batch % dp_size != 0:
+        dp = ()  # e.g. long_500k batch=1: replicate the batch dim
+    params, axes = api.init_params(cfg, abstract=True)
+    if cfg.quant == "int8" and shape.kind != "train":
+        params, axes = api.quantize_for_serving(cfg, params, axes)
+    p_specs = tree_pspecs(params, axes, mesh, rules)
+    specs = api.input_specs(cfg, shape)
+    n_params = sum(int(np.prod(v.shape)) for v in params.values())
+
+    def batch_pspec(v):
+        if not dp:
+            return P()
+        ax = (dp,) + (None,) * (len(v.shape) - 1)
+        return P(*ax)
+
+    if shape.kind == "train":
+        opt_state = opt_lib.abstract_state(params)
+        o_specs = {"m": p_specs, "v": p_specs, "step": P()}
+        b_specs = {k: batch_pspec(v) for k, v in specs.items()}
+        ocfg = opt_lib.OptConfig()
+
+        def train_step(params, opt, batch):
+            def lfn(p, b):
+                return api.loss_fn(p, cfg, b)
+            (loss, metrics), grads = jax.value_and_grad(
+                lfn, has_aux=True)(params, batch)
+            params, opt, om = opt_lib.apply_updates(grads=grads, state=opt,
+                                                    params=params, cfg=ocfg)
+            return params, opt, {"loss": loss}
+
+        jitted = jax.jit(
+            train_step,
+            in_shardings=_ns(mesh, (p_specs, o_specs, b_specs)),
+            out_shardings=_ns(mesh, (p_specs, o_specs, {"loss": P()})),
+            donate_argnums=(0, 1))
+        lowered = jitted.lower(params, opt_state, specs)
+        arg_bytes = _tree_bytes(params) + _tree_bytes(opt_state) \
+            + _tree_bytes(specs)
+        arg_dev = (_tree_bytes_per_device(params, p_specs, mesh)
+                   + _tree_bytes_per_device(opt_state, o_specs, mesh)
+                   + _tree_bytes_per_device(specs, b_specs, mesh))
+    elif shape.kind == "prefill":
+        cache_ax = api.cache_pspec_axes(cfg, shape.global_batch,
+                                        shape.seq_len)
+        cache_specs_d = api.cache_specs(cfg, shape.global_batch,
+                                        shape.seq_len)
+        c_specs = {k: spec_for(cache_specs_d[k][0], ax, mesh=mesh,
+                               rules=rules)
+                   for k, ax in cache_ax.items()}
+        b_specs = {k: batch_pspec(v) for k, v in specs.items()}
+
+        def prefill_step(params, batch):
+            cache, logits = api.prefill(params, cfg, batch)
+            return cache, logits
+
+        logit_spec = P(dp, None) if dp else P(None, None)
+        jitted = jax.jit(prefill_step,
+                         in_shardings=_ns(mesh, (p_specs, b_specs)),
+                         out_shardings=_ns(mesh, (c_specs, logit_spec)))
+        lowered = jitted.lower(params, specs)
+        arg_bytes = _tree_bytes(params) + _tree_bytes(specs)
+        arg_dev = (_tree_bytes_per_device(params, p_specs, mesh)
+                   + _tree_bytes_per_device(specs, b_specs, mesh))
+    else:  # decode
+        cache_ax = api.cache_pspec_axes(cfg, shape.global_batch,
+                                        shape.seq_len)
+        cache = specs["cache"]
+        c_specs = {k: spec_for(cache[k].shape, cache_ax[k], mesh=mesh,
+                               rules=rules) for k in cache}
+        tok_spec = P(dp) if dp else P(None)
+
+        def serve_step(params, cache, tokens):
+            return api.decode_step(params, cfg, cache, tokens)
+
+        logit_spec = P(dp, None) if dp else P(None, None)
+        jitted = jax.jit(serve_step,
+                         in_shardings=_ns(mesh, (p_specs, c_specs, tok_spec)),
+                         out_shardings=_ns(mesh, (c_specs, logit_spec)),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(params, cache, specs["tokens"])
+        arg_bytes = _tree_bytes(params) + _tree_bytes(cache)
+        arg_dev = (_tree_bytes_per_device(params, p_specs, mesh)
+                   + _tree_bytes_per_device(cache, c_specs, mesh))
+    return lowered, {"n_params": n_params, "arg_bytes_global": arg_bytes,
+                     "arg_bytes_per_device_sharded": arg_dev}
+
+
+def _tree_bytes(tree) -> int:
+    return sum(int(np.prod(v.shape)) * jnp.dtype(v.dtype).itemsize
+               for v in jax.tree.leaves(tree))
+
+
+def _tree_bytes_per_device(tree, specs, mesh) -> float:
+    """Shard-aware per-device bytes: global / (product of spec mesh axes).
+    Replicated leaves count fully on every device."""
+    total = 0.0
+    leaves_t = jax.tree.leaves(tree)
+    leaves_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    for v, s in zip(leaves_t, leaves_s):
+        n = 1
+        if isinstance(s, P):
+            for part in s:
+                if part is None:
+                    continue
+                for ax in ((part,) if isinstance(part, str) else part):
+                    n *= mesh.shape[ax]
+        total += int(np.prod(v.shape)) * jnp.dtype(v.dtype).itemsize / n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Main cell runner
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             overrides: Dict[str, str], rule_overrides: Dict[str, Any],
+             save_hlo: Optional[str] = None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    cfg = apply_overrides(cfg, overrides)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "mesh_shape": dict(mesh.shape), "chips": n_chips,
+        "overrides": overrides, "rules": {k: str(v) for k, v in
+                                          rule_overrides.items()},
+    }
+    with sharding_ctx(mesh, rule_overrides or None):
+        lowered, meta = build_lowered(cfg, shape, mesh,
+                                      rules=None)
+        result.update(meta)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        result["lower_s"] = round(t1 - t0, 2)
+        result["compile_s"] = round(t2 - t1, 2)
+        result["sharding_fallbacks"] = [
+            {"shape": list(s), "axis": a, "mesh_axes": str(m), "dim": d,
+             "size": sz} for s, a, m, d, sz in sharding_fallbacks()]
+    # --- memory analysis ---
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "generated_code_bytes":
+                getattr(ma, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem = {"error": str(e)}
+    # analytic per-device arg bytes (params+opt+batch sharded over chips)
+    mem["arg_bytes_global_analytic"] = result.pop("arg_bytes_global")
+    mem["arg_bytes_per_device_analytic"] = \
+        result.pop("arg_bytes_per_device_sharded", None) or \
+        mem["arg_bytes_global_analytic"] / n_chips
+    result["memory"] = mem
+    # --- cost analysis ---
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        result["cost"] = {
+            "flops": float(ca.get("flops", -1.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", -1.0)),
+            "transcendentals": float(ca.get("transcendentals", -1.0)),
+        }
+    except Exception as e:
+        result["cost"] = {"error": str(e)}
+    # --- collectives ---
+    try:
+        hlo = compiled.as_text()
+        result["collectives"] = collective_stats(hlo)
+        result["op_bytes"] = op_byte_histogram(hlo)
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(hlo)
+        result["hlo_lines"] = hlo.count("\n")
+    except Exception as e:
+        result["collectives"] = {"error": str(e)}
+    result["status"] = "ok"
+    result["total_s"] = round(time.time() - t0, 2)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (e.g. attention_impl=chunked)")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="sharding rule override logical=mesh1[,mesh2]|none")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+    overrides = dict(s.split("=", 1) for s in args.set)
+    rules: Dict[str, Any] = {}
+    for r in args.rule:
+        k, v = r.split("=", 1)
+        if v == "none":
+            rules[k] = None
+        else:
+            ax = tuple(v.split(","))
+            rules[k] = ax if len(ax) > 1 else ax[0]
+    res = run_cell(args.arch, args.shape, args.mesh, overrides, rules,
+                   save_hlo=args.save_hlo)
+    js = json.dumps(res, indent=2, default=str)
+    print(js)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(js)
+
+
+if __name__ == "__main__":
+    main()

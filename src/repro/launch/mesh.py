@@ -1,0 +1,39 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+XLA_FLAGS before any jax initialization, smoke tests see the 1 real device.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh for elastic-scaling experiments."""
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The axes a batch dim is sharded over (pod+data when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def smoke_mesh() -> Optional[Mesh]:
+    """Mesh for local runs: None on 1 device (skips the SPMD pipeline —
+    XLA:CPU compiles sharding-constrained scans pathologically slowly),
+    a (n,1) data mesh otherwise."""
+    n = len(jax.devices())
+    if n == 1:
+        return None
+    return jax.make_mesh((n, 1), ("data", "model"))

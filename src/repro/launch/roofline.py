@@ -1,0 +1,199 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline deliverable).
+
+Three terms per (arch x shape), single-pod mesh, TPU v5e constants:
+
+  compute    = HLO_FLOPs / (chips * 197e12)        [s]
+  memory     = HLO_bytes / (chips * 819e9)         [s]
+  collective = coll_bytes_global / (chips * 50e9)  [s]
+
+HLO_FLOPs/bytes come from the two-point layer extrapolation (cost_*.json,
+exact for homogeneous stacks — see run_all_dryruns.py); collective bytes
+are parsed per-device from the post-SPMD HLO, so global = per_device*chips.
+MODEL_FLOPS = 6*N*D (2*N*D + attention for inference shapes) flags
+remat/dispatch waste via the useful-compute ratio.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.models.api import analytic_param_count, model_flops
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+
+def load_cells(tag: str = "baseline") -> List[Dict]:
+    """Join cost_* (extrapolated) with proof_* (memory) per cell."""
+    tagdir = os.path.join(RESULTS_DIR, tag)
+    cells = []
+    for path in sorted(glob.glob(os.path.join(tagdir, "cost_*.json"))):
+        cost = json.load(open(path))
+        arch, shape = cost["arch"], cost["shape"]
+        cell = {"arch": arch, "shape": shape, "status": cost["status"]}
+        if cost["status"] != "ok":
+            cells.append(cell)
+            continue
+        proof_p = os.path.join(tagdir, f"proof_{arch}_{shape}_single.json")
+        proof = json.load(open(proof_p)) if os.path.exists(proof_p) else {}
+        cell.update(analyse(arch, shape, cost, proof))
+        cells.append(cell)
+    for path in sorted(glob.glob(os.path.join(tagdir, "skip_*.json"))):
+        cells.append(json.load(open(path)))
+    return cells
+
+
+_ACT_RW_PER_LAYER = 8.0   # residual-equivalent reads+writes, fused blocks
+
+
+def _layers_of(cfg) -> int:
+    if cfg.family == "encdec":
+        return cfg.num_encoder_layers + cfg.num_decoder_layers
+    return cfg.num_layers
+
+
+def analytic_memory_bytes(cfg, shape, arg_bytes_dev: float,
+                          overrides: Dict, chips: int = 256) -> float:
+    """Fused-TPU memory floor, per device.
+
+    args r/w (params/opt/cache/batch; dtype effects like int8 weights or
+    int8 KV arrive through arg_bytes_dev, which is extrapolated from the
+    variant's own dry-run) + activation residual traffic. Raw
+    bytes_accessed from XLA:CPU is kept as the *unfused upper bound* (the
+    CPU backend materializes f32 converts around every bf16 dot).
+    """
+    d, ll = cfg.d_model, _layers_of(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        remat = str(overrides.get("remat_policy", cfg.remat_policy))
+        fwd_mult = {"nothing": 3.0, "dots": 2.5, "none": 2.0}.get(remat, 3.0)
+        args_rw = 2.0 * arg_bytes_dev           # read + write params/opt
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        fwd_mult = 1.0
+        args_rw = arg_bytes_dev                 # read params, write cache
+    else:
+        tokens = shape.global_batch
+        fwd_mult = 1.0
+        args_rw = arg_bytes_dev                 # read params + cache
+    act = _ACT_RW_PER_LAYER * fwd_mult * tokens * d * ll * 2.0 / chips
+    return args_rw + act
+
+
+def analyse(arch: str, shape_name: str, cost: Dict,
+            proof: Optional[Dict] = None, chips: int = 256) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    flops_dev = cost["flops"]                     # per-device (SPMD module)
+    bytes_raw = cost["bytes_accessed"]
+    overrides = {}
+    pts = cost.get("point_results") or []
+    if pts:
+        overrides = pts[0].get("overrides", {})
+    arg_dev = cost.get("arg_bytes_per_device")
+    if arg_dev is None and len(pts) == 2 and "points" in cost:
+        a1 = pts[0]["memory"]["arg_bytes_per_device_analytic"]
+        a2 = pts[1]["memory"]["arg_bytes_per_device_analytic"]
+        x1, x2 = cost["points"]
+        arg_dev = a1 + (a2 - a1) / (x2 - x1) * (cost["x_full"] - x1)
+    bytes_dev = analytic_memory_bytes(cfg, shape, arg_dev or 0.0,
+                                      overrides, chips)
+    coll_dev = cost.get("collective_bytes", 0.0)
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_global = flops_dev * chips
+    out = {
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "bytes_per_device_raw": bytes_raw,
+        "collective_bytes_per_device": coll_dev,
+        "collective_per_op": cost.get("collective_bytes_per_op", {}),
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "step_time_s": max(terms.values()),
+        "roofline_fraction": t_compute / max(terms.values())
+        if max(terms.values()) > 0 else 0.0,
+        "mfu_vs_model_flops": (mf / chips / PEAK_FLOPS)
+        / max(terms.values()) if max(terms.values()) > 0 else 0.0,
+    }
+    if proof and proof.get("status") == "ok":
+        mem = proof.get("memory", {})
+        out["hbm_args_gb"] = (mem.get("argument_bytes") or 0) / 1e9
+        out["hbm_temp_gb"] = (mem.get("temp_bytes") or 0) / 1e9
+        out["fits_16gb"] = (out["hbm_args_gb"] + out["hbm_temp_gb"]) <= 16.0
+        out["compile_s"] = proof.get("compile_s")
+    return out
+
+
+def suggestion(cell: Dict) -> str:
+    d = cell.get("dominant")
+    if d == "collective":
+        ops = cell.get("collective_per_op", {})
+        top = max(ops, key=ops.get) if ops else "?"
+        return (f"dominant {top}: reshard to cut it (MoE dispatch all-to-all"
+                f" / weight-gather batching)")
+    if d == "memory":
+        return "cut bytes: int8 weights, fused attention (no score spill), " \
+               "bf16 cache"
+    return "compute-bound: reduce remat recompute / causal-band waste"
+
+
+def table(cells: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| 6ND/HLO | MFU | fits16GB |")
+    sep = "|" + "---|" * 9
+    rows = [hdr, sep]
+    for c in sorted(cells, key=lambda x: (x["arch"], x["shape"])):
+        if c.get("status") == "skipped":
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | skipped"
+                        f" | — | — | — |")
+            continue
+        if c.get("status") != "ok":
+            rows.append(f"| {c['arch']} | {c['shape']} | ? | ? | ? | error "
+                        f"| ? | ? | ? |")
+            continue
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['compute_s']:.3e} "
+            f"| {c['memory_s']:.3e} | {c['collective_s']:.3e} "
+            f"| {c['dominant']} | {c['useful_ratio']:.2f} "
+            f"| {c['mfu_vs_model_flops']*100:.1f}% "
+            f"| {'Y' if c.get('fits_16gb') else 'N'} |")
+    return "\n".join(rows)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    cells = load_cells(args.tag)
+    print(table(cells))
+    for c in cells:
+        if c.get("status") == "ok":
+            print(f"- {c['arch']} x {c['shape']}: {suggestion(c)}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(cells, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,207 @@
+"""Driver: run the full dry-run matrix and persist JSON incrementally.
+
+Per (arch x shape) cell:
+  proof runs  — scanned lowering compiled on BOTH meshes (16,16) and
+                (2,16,16): the runnability deliverable + memory_analysis.
+  cost runs   — two unrolled reduced-layer compiles (no while ops) on the
+                single-pod mesh; HLO flops / bytes / collective bytes are
+                affine in layer count, so the full-depth values are the
+                two-point extrapolation (exact for homogeneous stacks).
+
+Each dryrun executes in a subprocess so jax device-count state is isolated.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.run_all_dryruns [--only arch[,arch]]
+      [--shapes s1,s2] [--skip-existing] [--tag baseline]
+      [--set k=v ...] [--rule k=v ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs import REGISTRY, SHAPES, get_config, shape_applicable
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+
+def cost_points(arch: str) -> Tuple[List[Dict[str, str]], List[float], float]:
+    """Returns ([overrides_point1, overrides_point2], [x1, x2], x_full)."""
+    cfg = get_config(arch)
+    if cfg.family == "transformer":
+        nf = cfg.moe.first_dense_layers if cfg.moe.num_experts else 0
+        return ([{"num_layers": str(nf + 2)}, {"num_layers": str(nf + 4)}],
+                [2.0, 4.0], float(cfg.num_layers - nf))
+    if cfg.family == "ssm":
+        return ([{"num_layers": "2"}, {"num_layers": "4"}],
+                [2.0, 4.0], float(cfg.num_layers))
+    if cfg.family == "hybrid":
+        pat = len(cfg.hybrid.pattern)
+        tail = cfg.num_layers % pat
+        return ([{"num_layers": str(pat + tail)},
+                 {"num_layers": str(2 * pat + tail)}],
+                [1.0, 2.0], float(cfg.num_layers // pat))
+    if cfg.family == "encdec":
+        return ([{"num_encoder_layers": "2", "num_decoder_layers": "2"},
+                 {"num_encoder_layers": "4", "num_decoder_layers": "4"}],
+                [2.0, 4.0], float(cfg.num_encoder_layers))
+    if cfg.family == "vlm":
+        per = cfg.cross_attn_every
+        return ([{"num_layers": str(per)}, {"num_layers": str(2 * per)}],
+                [1.0, 2.0], float(cfg.num_layers // per))
+    raise ValueError(cfg.family)
+
+
+def run_dryrun(arch: str, shape: str, mesh: str, sets: Dict[str, str],
+               rules: List[str], out: str, timeout: int = 3600) -> Dict:
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--mesh", mesh, "--out", out]
+    for k, v in sets.items():
+        cmd += ["--set", f"{k}={v}"]
+    for r in rules:
+        cmd += ["--rule", r]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "../..")
+    t0 = time.time()
+    try:
+        p = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=timeout, env=env)
+    except subprocess.TimeoutExpired:
+        return {"status": "timeout", "arch": arch, "shape": shape,
+                "mesh": mesh}
+    if p.returncode != 0:
+        return {"status": "error", "arch": arch, "shape": shape,
+                "mesh": mesh, "stderr": p.stderr[-4000:],
+                "wall_s": round(time.time() - t0, 1)}
+    with open(out) as f:
+        return json.load(f)
+
+
+def extrapolate(p1: Dict, p2: Dict, x1: float, x2: float,
+                x_full: float) -> Dict:
+    def ex(a, b):
+        return a + (b - a) / (x2 - x1) * (x_full - x1)
+
+    out = {"points": [x1, x2], "x_full": x_full}
+    c1, c2 = p1.get("cost", {}), p2.get("cost", {})
+    for k in ("flops", "bytes_accessed", "transcendentals"):
+        if k in c1 and k in c2:
+            out[k] = ex(c1[k], c2[k])
+    ob1, ob2 = p1.get("op_bytes", {}), p2.get("op_bytes", {})
+    if ob1 and ob2:
+        # CPU-backend artifact bytes (absent on native-bf16 TPU):
+        # convert ~ 1.5x result (bf16 read + f32 write), copy ~ 2x result
+        def artifact(ob):
+            return 1.5 * ob.get("convert", 0.0) + 2.0 * ob.get("copy", 0.0)
+        art = ex(artifact(ob1), artifact(ob2))
+        out["artifact_bytes"] = art
+        if "bytes_accessed" in out:
+            out["adj_bytes_accessed"] = max(out["bytes_accessed"] - art,
+                                            0.0)
+        out["op_bytes_points"] = [ob1, ob2]
+    col1 = p1.get("collectives", {})
+    col2 = p2.get("collectives", {})
+    if "total_bytes" in col1 and "total_bytes" in col2:
+        out["collective_bytes"] = ex(col1["total_bytes"],
+                                     col2["total_bytes"])
+        per = {}
+        ops = set(col1.get("per_op", {})) | set(col2.get("per_op", {}))
+        for op in ops:
+            b1 = col1.get("per_op", {}).get(op, {}).get("bytes", 0.0)
+            b2 = col2.get("per_op", {}).get(op, {}).get("bytes", 0.0)
+            per[op] = ex(b1, b2)
+        out["collective_bytes_per_op"] = per
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--shapes", default=None)
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-proof", action="store_true")
+    ap.add_argument("--no-cost", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--rule", action="append", default=[])
+    args = ap.parse_args()
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    from repro.configs import list_archs
+    archs = args.only.split(",") if args.only else list(list_archs())
+    shapes = args.shapes.split(",") if args.shapes else list(SHAPES)
+    extra_sets = dict(s.split("=", 1) for s in args.set)
+
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            ok, reason = shape_applicable(cfg, SHAPES[shape])
+            tagdir = os.path.join(RESULTS_DIR, args.tag)
+            os.makedirs(tagdir, exist_ok=True)
+            if not ok:
+                path = os.path.join(tagdir, f"skip_{arch}_{shape}.json")
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape,
+                               "status": "skipped", "reason": reason}, f)
+                print(f"[skip ] {arch} x {shape}: {reason}", flush=True)
+                continue
+            # ---- proof runs (scanned) on both meshes
+            if not args.no_proof:
+                for mesh in args.meshes.split(","):
+                    out = os.path.join(tagdir,
+                                       f"proof_{arch}_{shape}_{mesh}.json")
+                    if args.skip_existing and os.path.exists(out):
+                        continue
+                    t0 = time.time()
+                    res = run_dryrun(arch, shape, mesh, dict(extra_sets),
+                                     args.rule, out)
+                    with open(out, "w") as f:
+                        json.dump(res, f, indent=1, default=str)
+                    print(f"[proof] {arch} x {shape} x {mesh}: "
+                          f"{res.get('status')} ({time.time()-t0:.0f}s)",
+                          flush=True)
+            # ---- cost runs (unrolled two-point) single-pod
+            if not args.no_cost:
+                out = os.path.join(tagdir, f"cost_{arch}_{shape}.json")
+                if args.skip_existing and os.path.exists(out):
+                    continue
+                points, xs, x_full = cost_points(arch)
+                results = []
+                failed = False
+                for i, ov in enumerate(points):
+                    sets = {"scan_layers": "false", **ov, **extra_sets}
+                    pth = os.path.join(tagdir,
+                                       f".pt{i}_{arch}_{shape}.json")
+                    t0 = time.time()
+                    res = run_dryrun(arch, shape, "single", sets,
+                                     args.rule, pth)
+                    results.append(res)
+                    print(f"[cost{i}] {arch} x {shape}: "
+                          f"{res.get('status')} ({time.time()-t0:.0f}s)",
+                          flush=True)
+                    if res.get("status") != "ok":
+                        failed = True
+                        break
+                if not failed:
+                    final = extrapolate(results[0], results[1], xs[0], xs[1],
+                                        x_full)
+                    final.update({"arch": arch, "shape": shape,
+                                  "status": "ok",
+                                  "point_results": results})
+                else:
+                    final = {"arch": arch, "shape": shape, "status": "error",
+                             "point_results": results}
+                with open(out, "w") as f:
+                    json.dump(final, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,348 @@
+"""Uniform Model API: one facade over every architecture family.
+
+Provides:
+  init_params(cfg)        — concrete (reduced/smoke) or abstract (dry-run)
+  loss_fn / prefill / decode_step dispatchers
+  input_specs(cfg, shape) — ShapeDtypeStruct stand-ins for every model input
+  cache_specs(cfg, B, S)  — decode-cache ShapeDtypeStructs + logical axes
+  analytic_param_count    — N for the 6·N·D roofline term
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.param import Registrar
+
+_FAMILIES: Dict[str, Any] = {}
+
+
+def _family(cfg: ModelConfig):
+    if not _FAMILIES:
+        from repro.models import (transformer, mamba2, recurrentgemma,
+                                  encdec, vlm)
+        _FAMILIES.update({
+            "transformer": transformer,
+            "ssm": mamba2,
+            "hybrid": recurrentgemma,
+            "encdec": encdec,
+            "vlm": vlm,
+        })
+    return _FAMILIES[cfg.family]
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0, abstract: bool = False
+                ) -> Tuple[Dict[str, Any], Dict[str, Tuple[str, ...]]]:
+    """Returns (params, logical_axes). abstract => ShapeDtypeStructs only."""
+    reg = Registrar(abstract=abstract, seed=seed,
+                    dtype=jnp.dtype(cfg.param_dtype))
+    _family(cfg).init_params(reg, cfg)
+    return reg.params, reg.axes
+
+
+_QUANT_SKIP = ("norm", "scale", "router", "gate_attn", "gate_mlp", "lam",
+               "A_log", "dt_bias", "/b")
+
+
+def quantize_for_serving(cfg: ModelConfig, params: Dict[str, Any],
+                         axes: Dict[str, Tuple[str, ...]]
+                         ) -> Tuple[Dict[str, Any], Dict[str, Tuple[str, ...]]]:
+    """FENIX Model Engine INT8 applied to LM weights (serve path only).
+
+    Matmul weights become int8 + a per-tensor scale (per-layer for scanned
+    stacks).  Works on abstract (ShapeDtypeStruct) and concrete params.
+    Halves the weight-read bytes of memory-bound decode — §Perf lever.
+    """
+    new_p, new_ax = {}, {}
+    for k, v in params.items():
+        new_p[k], new_ax[k] = v, axes[k]
+        if v.ndim < 2 or any(s in k for s in _QUANT_SKIP):
+            continue
+        if not (k.endswith("/w") or k.endswith("/table")
+                or "/experts/" in k):
+            continue
+        stacked = axes[k][0] == "layers"
+        sshape = (v.shape[0],) if stacked else ()
+        sax = ("layers",) if stacked else ()
+        if isinstance(v, jax.ShapeDtypeStruct):
+            new_p[k] = jax.ShapeDtypeStruct(v.shape, jnp.int8)
+            new_p[f"{k}_scale"] = jax.ShapeDtypeStruct(sshape, jnp.float32)
+        else:
+            w = jnp.asarray(v, jnp.float32)
+            red = tuple(range(1, w.ndim)) if stacked else None
+            amax = jnp.max(jnp.abs(w), axis=red) if stacked \
+                else jnp.max(jnp.abs(w))
+            scale = jnp.maximum(amax, 1e-8) / 127.0
+            sc = scale.reshape(sshape + (1,) * (w.ndim - len(sshape)))
+            new_p[k] = jnp.clip(jnp.round(w / sc), -127, 127).astype(jnp.int8)
+            new_p[f"{k}_scale"] = scale.astype(jnp.float32)
+        new_ax[k] = axes[k]
+        new_ax[f"{k}_scale"] = sax
+    return new_p, new_ax
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, Dict]:
+    return _family(cfg).loss_fn(params, cfg, batch)
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    fam = _family(cfg)
+    if cfg.family in ("encdec", "vlm"):
+        return fam.prefill(params, cfg, batch)
+    return fam.prefill(params, cfg, batch["tokens"])
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    return _family(cfg).decode_step(params, cfg, cache, tokens)
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, smax: int,
+                src_len: Optional[int] = None
+                ) -> Dict[str, Tuple[Tuple[int, ...], Any, Tuple[str, ...]]]:
+    fam = _family(cfg)
+    if cfg.family == "encdec":
+        return fam.cache_spec(cfg, batch, smax,
+                              src_len=src_len if src_len else smax)
+    return fam.cache_spec(cfg, batch, smax)
+
+
+def grow_cache(cfg: ModelConfig, cache: Dict[str, Any], batch: int,
+               old_smax: int, new_smax: int,
+               src_len: Optional[int] = None) -> Dict[str, Any]:
+    """Zero-pad the kv_seq axes of a prefill cache so decode can append.
+
+    Identifies the sequence axis per entry by diffing cache_specs at the two
+    lengths (cross-attention / ring / SSM entries are untouched).
+    """
+    old = cache_specs(cfg, batch, old_smax, src_len=src_len)
+    new = cache_specs(cfg, batch, new_smax, src_len=src_len)
+    out = dict(cache)
+    for k, (oshp, _dt, _ax) in old.items():
+        nshp = new[k][0]
+        if oshp == nshp or k not in cache:
+            continue
+        widths = [(0, n - o) for o, n in zip(oshp, nshp)]
+        arr = cache[k]
+        # the cache entry may lack the stacking dim match (prefill emits
+        # exactly spec-shaped arrays), pad on the differing axes
+        widths = [(0, n - o) for o, n in zip(arr.shape, nshp[-arr.ndim:])] \
+            if arr.ndim != len(oshp) else widths
+        out[k] = jnp.pad(arr, widths)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step function inputs.
+
+    train  -> {tokens, labels [, src_embeds | image_embeds]}
+    prefill-> {tokens [, src_embeds | image_embeds]}
+    decode -> {tokens [B], cache: {...}}
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.activation_dtype)
+    tok = jax.ShapeDtypeStruct((b, s), i32)
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = tok
+        out["labels"] = tok
+        if cfg.family == "encdec":
+            out["src_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), act)
+        if cfg.family == "vlm":
+            out["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_image_tokens, cfg.d_model), act)
+        return out
+    if shape.kind == "prefill":
+        out["tokens"] = tok
+        if cfg.family == "encdec":
+            out["src_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), act)
+        if cfg.family == "vlm":
+            out["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_image_tokens, cfg.d_model), act)
+        return out
+    # decode: single token + KV cache of seq_len
+    out["tokens"] = jax.ShapeDtypeStruct((b,), i32)
+    cache = {}
+    for name, (shp, dt, _ax) in cache_specs(cfg, b, s).items():
+        cache[name] = jax.ShapeDtypeStruct(shp, dt)
+    out["cache"] = cache
+    return out
+
+
+def cache_pspec_axes(cfg: ModelConfig, batch: int, smax: int
+                     ) -> Dict[str, Tuple[str, ...]]:
+    return {k: ax for k, (shp, dt, ax) in
+            cache_specs(cfg, batch, smax).items()}
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter counts (for MODEL_FLOPS = 6*N*D)
+# ---------------------------------------------------------------------------
+
+
+def analytic_param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Matmul-participating parameters per token.
+
+    Excludes the embedding *gather* (not a matmul); includes the LM head
+    (tied or not — the logits matmul runs either way).  For MoE with
+    active_only=True, routed experts count top_k of num_experts.
+    """
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    def attn_gqa() -> int:
+        return d * h * dh + 2 * d * hkv * dh + h * dh * d
+
+    def attn_mla() -> int:
+        dn, dr, r = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.kv_lora_rank
+        n = 0
+        if cfg.q_lora_rank:
+            n += d * cfg.q_lora_rank + cfg.q_lora_rank * h * (dn + dr)
+        else:
+            n += d * h * (dn + dr)
+        n += d * r + d * dr + r * h * dn + r * h * cfg.v_head_dim
+        n += h * cfg.v_head_dim * d
+        return n
+
+    def mlp_dense(ff) -> int:
+        return 3 * d * ff
+
+    total = 0
+    if cfg.family == "transformer":
+        attn = attn_mla() if cfg.attention == "mla" else attn_gqa()
+        m = cfg.moe
+        if m.num_experts:
+            n_first = m.first_dense_layers
+            total += n_first * (attn + mlp_dense(m.first_dense_d_ff))
+            n_moe = cfg.num_layers - n_first
+            e_cnt = m.top_k if active_only else m.num_experts
+            per = (attn + d * m.num_experts            # router
+                   + e_cnt * 3 * d * m.expert_d_ff
+                   + (3 * d * m.shared_d_ff if m.num_shared_experts else 0))
+            total += n_moe * per
+        else:
+            total += cfg.num_layers * (attn + mlp_dense(f))
+    elif cfg.family == "ssm":
+        s = cfg.ssm
+        d_in = s.expand * d
+        gn = s.n_groups * s.d_state
+        nh = d_in // s.head_dim
+        per = 2 * d * d_in + 2 * d * gn + d * nh + d_in * d
+        total += cfg.num_layers * per
+    elif cfg.family == "hybrid":
+        w = cfg.hybrid.lru_width or d
+        pat = cfg.hybrid.pattern
+        n_rec = sum(1 for i in range(cfg.num_layers)
+                    if pat[i % len(pat)] == "recurrent") \
+            if cfg.num_layers % len(pat) == 0 else None
+        # generic: count by walking the pattern
+        n_rec = 0
+        n_att = 0
+        for i in range(cfg.num_layers):
+            if pat[i % len(pat)] == "recurrent":
+                n_rec += 1
+            else:
+                n_att += 1
+        rec = 2 * d * w + 2 * (w * w) // 16 + w * d
+        total += n_rec * rec + n_att * attn_gqa()
+        total += cfg.num_layers * mlp_dense(f)
+    elif cfg.family == "encdec":
+        enc = cfg.num_encoder_layers * (attn_gqa() + mlp_dense(f))
+        dec = cfg.num_decoder_layers * (2 * attn_gqa() + mlp_dense(f))
+        total += enc + dec
+    elif cfg.family == "vlm":
+        per, n_super = cfg.cross_attn_every, cfg.num_layers // cfg.cross_attn_every
+        total += n_super * ((per - 1) * (attn_gqa() + mlp_dense(f))
+                            + attn_gqa() + mlp_dense(f))
+    else:
+        raise ValueError(cfg.family)
+    total += d * v  # logits head matmul
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6*N*D convention. For decode shapes D = global_batch (1 token each);
+    attention-over-cache FLOPs are additionally included (2*bytes-free term:
+    2 * B * S * kv_width) since they dominate long-context decode."""
+    n = analytic_param_count(cfg, active_only=True)
+    if shape.kind == "train":
+        d_tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * d_tokens
+    if shape.kind == "prefill":
+        d_tokens = shape.global_batch * shape.seq_len
+        flops = 2.0 * n * d_tokens
+        flops += _attn_flops(cfg, shape.global_batch, shape.seq_len)
+        return flops
+    # decode: one token per sequence
+    flops = 2.0 * n * shape.global_batch
+    flops += _decode_attn_flops(cfg, shape.global_batch, shape.seq_len)
+    return flops
+
+
+def _attn_flops(cfg: ModelConfig, b: int, s: int) -> float:
+    """Causal self-attention matmul FLOPs (scores + combine), per model."""
+    if cfg.family == "ssm":
+        return 0.0
+    h, dh = cfg.num_heads, cfg.head_dim
+    if cfg.attention == "mla":
+        dh = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    full = 2.0 * 2.0 * b * h * dh * s * s / 2.0      # causal half
+    if cfg.family == "hybrid":
+        win = cfg.hybrid.attention_window
+        pat = cfg.hybrid.pattern
+        n_att = sum(1 for i in range(cfg.num_layers)
+                    if pat[i % len(pat)] != "recurrent")
+        per = 2.0 * 2.0 * b * h * dh * s * min(win, s)
+        return n_att * per
+    n_layers = cfg.num_layers if cfg.family != "encdec" \
+        else cfg.num_encoder_layers + 2 * cfg.num_decoder_layers
+    return n_layers * full
+
+
+def _decode_attn_flops(cfg: ModelConfig, b: int, s: int) -> float:
+    if cfg.family == "ssm":
+        s_cfg = cfg.ssm
+        d_in = s_cfg.expand * cfg.d_model
+        nh = d_in // s_cfg.head_dim
+        per = 2.0 * 2.0 * b * nh * s_cfg.head_dim * s_cfg.d_state
+        return cfg.num_layers * per
+    h, dh = cfg.num_heads, cfg.head_dim
+    if cfg.attention == "mla":
+        # absorbed decode: q_abs@ckv + probs@ckv over rank R
+        r = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+        return cfg.num_layers * 2.0 * 2.0 * b * cfg.num_heads * r * s
+    eff_s = s
+    if cfg.family == "hybrid":
+        win = cfg.hybrid.attention_window
+        pat = cfg.hybrid.pattern
+        n_att = sum(1 for i in range(cfg.num_layers)
+                    if pat[i % len(pat)] != "recurrent")
+        n_rec = cfg.num_layers - n_att
+        w = cfg.hybrid.lru_width or cfg.d_model
+        return (n_att * 2.0 * 2.0 * b * h * dh * min(win, s)
+                + n_rec * 2.0 * b * w)
+    n_layers = cfg.num_layers if cfg.family != "encdec" \
+        else cfg.num_decoder_layers
+    per = 2.0 * 2.0 * b * h * dh * eff_s
+    if cfg.family == "encdec":
+        per *= 2  # self + cross
+    if cfg.family == "vlm":
+        n_cross = cfg.num_layers // cfg.cross_attn_every
+        per_cross = 2.0 * 2.0 * b * h * dh * cfg.num_image_tokens
+        return (cfg.num_layers - n_cross) * per + n_cross * per_cross
+    return n_layers * per

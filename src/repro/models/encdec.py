@@ -1,0 +1,239 @@
+"""Encoder-decoder transformer backbone (seamless-m4t-medium).
+
+The audio/speech frontend is a STUB per the task spec: the encoder consumes
+precomputed frame embeddings [B, S_src, d_model] from ``input_specs()``.
+Decoder: causal self-attention (KV-cached) + cross-attention to the encoder
+output (cross-KV computed once at prefill).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import Registrar, maybe_scan, shard, subtree
+from repro.models.transformer import (_Prefixed, _Stacked, _gqa_qkv, _remat)
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_self_attn(reg, cfg: ModelConfig, path="attn") -> None:
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    reg.param(f"{path}/wq/w", (d, h, dh), ("embed", "heads", "head_dim"),
+              scale=d ** -0.5)
+    reg.param(f"{path}/wk/w", (d, hkv, dh), ("embed", "kv_heads", "head_dim"),
+              scale=d ** -0.5)
+    reg.param(f"{path}/wv/w", (d, hkv, dh), ("embed", "kv_heads", "head_dim"),
+              scale=d ** -0.5)
+    reg.param(f"{path}/wo/w", (h, dh, d), ("heads", "head_dim", "embed"),
+              scale=(h * dh) ** -0.5)
+
+
+def init_cross_attn(reg, cfg: ModelConfig, path="xattn") -> None:
+    _init_self_attn(reg, cfg, path=path)
+
+
+def init_params(reg: Registrar, cfg: ModelConfig) -> None:
+    L.init_embedding(reg, "embed", cfg.vocab_size, cfg.d_model)
+    enc = _Stacked(reg, cfg.num_encoder_layers, "enc/")
+    L.init_rmsnorm(enc, "ln_attn", cfg.d_model)
+    _init_self_attn(enc, cfg)
+    L.init_rmsnorm(enc, "ln_mlp", cfg.d_model)
+    L.init_glu_mlp(enc, "mlp", cfg.d_model, cfg.d_ff)
+    dec = _Stacked(reg, cfg.num_decoder_layers, "dec/")
+    L.init_rmsnorm(dec, "ln_attn", cfg.d_model)
+    _init_self_attn(dec, cfg)
+    L.init_rmsnorm(dec, "ln_x", cfg.d_model)
+    init_cross_attn(dec, cfg)
+    L.init_rmsnorm(dec, "ln_mlp", cfg.d_model)
+    L.init_glu_mlp(dec, "mlp", cfg.d_model, cfg.d_ff)
+    L.init_rmsnorm(reg, "ln_enc_f", cfg.d_model)
+    L.init_rmsnorm(reg, "ln_f", cfg.d_model)
+    if not cfg.tie_embeddings:
+        reg.param("head/w", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                  scale=cfg.d_model ** -0.5)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention
+# ---------------------------------------------------------------------------
+
+
+def cross_kv(p, cfg: ModelConfig, ctx: jax.Array, path="xattn"):
+    """ctx [B,Sk,d] -> (k, v) [B,Sk,hkv,dh]. No rope on cross keys."""
+    k = L.dense(p, f"{path}/wk", ctx, "...d,dhk->...hk")
+    v = L.dense(p, f"{path}/wv", ctx, "...d,dhk->...hk")
+    return k, v
+
+
+def cross_attend(p, cfg: ModelConfig, x, k, v, path="xattn"):
+    """x [B,Sq,d] or [B,d]; full (non-causal) attention to ctx."""
+    q = L.dense(p, f"{path}/wq", x, "...d,dhk->...hk")
+    if x.ndim == 2:
+        lengths = jnp.full((x.shape[0],), k.shape[1])
+        o = L.decode_attention(q, k, v, lengths)
+    else:
+        o = L.attention(q, k, v, causal=False, impl=cfg.attention_impl,
+                        chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
+    return L.dense(p, f"{path}/wo", o, "...hk,hkd->...d")
+
+
+# ---------------------------------------------------------------------------
+# Encoder / decoder layers
+# ---------------------------------------------------------------------------
+
+
+def _enc_layer(p, cfg, x):
+    h = L.rmsnorm(p, "ln_attn", x, cfg.norm_eps)
+    positions = jnp.arange(x.shape[1])[None, :]
+    q, k, v = _gqa_qkv(p, cfg, h, positions)
+    o = L.attention(q, k, v, causal=False, impl=cfg.attention_impl,
+                    chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
+    x = x + L.dense(p, "attn/wo", o, "...hk,hkd->...d")
+    h = L.rmsnorm(p, "ln_mlp", x, cfg.norm_eps)
+    x = x + L.glu_mlp(p, "mlp", h, cfg.mlp_act)
+    return shard(x, "batch", "act_seq", "embed")
+
+
+def encode(params, cfg: ModelConfig, src_embeds: jax.Array) -> jax.Array:
+    x = shard(src_embeds.astype(cfg.activation_dtype), "batch", "seq", "embed")
+    stacked = subtree(params, "enc/")
+
+    def body(x, p_l):
+        fn = _remat(lambda pp, xx: _enc_layer(pp, cfg, xx), cfg)
+        return fn(p_l, x), None
+
+    x, _ = maybe_scan(body, x, stacked, cfg.scan_layers)
+    return L.rmsnorm(params, "ln_enc_f", x, cfg.norm_eps)
+
+
+def _dec_layer(p, cfg, x, enc_out=None, xkv=None, mode="train",
+               cache_l=None, pos=None):
+    """Returns (x, cache_entry)."""
+    new_cache = {}
+    h = L.rmsnorm(p, "ln_attn", x, cfg.norm_eps)
+    if mode in ("train", "prefill"):
+        positions = jnp.arange(x.shape[1])[None, :]
+        q, k, v = _gqa_qkv(p, cfg, h, positions)
+        o = L.attention(q, k, v, causal=True, impl=cfg.attention_impl,
+                        chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
+        if mode == "prefill":
+            new_cache["k"], new_cache["v"] = k, v
+        x = x + L.dense(p, "attn/wo", o, "...hk,hkd->...d")
+    else:
+        b = x.shape[0]
+        posv = jnp.full((b,), pos)
+        q = L.dense(p, "attn/wq", h, "...d,dhk->...hk")
+        k = L.dense(p, "attn/wk", h, "...d,dhk->...hk")
+        v = L.dense(p, "attn/wv", h, "...d,dhk->...hk")
+        q = L.rope(q, posv[:, None], cfg.rope_theta)
+        k = L.rope(k, posv[:, None], cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(cache_l["k"], k[:, None],
+                                                 pos, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache_l["v"], v[:, None],
+                                                 pos, 1)
+        o = L.decode_attention(q, kc, vc, jnp.full((b,), pos + 1))
+        x = x + L.dense(p, "attn/wo", o, "...hk,hkd->...d")
+        new_cache["k"], new_cache["v"] = kc, vc
+    # cross attention
+    h = L.rmsnorm(p, "ln_x", x, cfg.norm_eps)
+    if xkv is None:
+        xk, xv = cross_kv(p, cfg, enc_out)
+        if mode == "prefill":
+            new_cache["xk"], new_cache["xv"] = xk, xv
+    else:
+        xk, xv = xkv
+    x = x + cross_attend(p, cfg, h, xk, xv)
+    h = L.rmsnorm(p, "ln_mlp", x, cfg.norm_eps)
+    x = x + L.glu_mlp(p, "mlp", h, cfg.mlp_act)
+    if x.ndim == 3:
+        x = shard(x, "batch", "act_seq", "embed")
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model API
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    enc_out = encode(params, cfg, batch["src_embeds"])
+    x = L.embed(params, "embed", batch["tokens"]).astype(cfg.activation_dtype)
+    x = shard(x, "batch", "seq", "embed")
+    stacked = subtree(params, "dec/")
+
+    def body(x, p_l):
+        fn = _remat(lambda pp, xx: _dec_layer(pp, cfg, xx, enc_out=enc_out,
+                                              mode="train")[0], cfg)
+        return fn(p_l, x), None
+
+    x, _ = maybe_scan(body, x, stacked, cfg.scan_layers)
+    x = L.rmsnorm(params, "ln_f", x, cfg.norm_eps)
+    logits = L.logits_head(params, x,
+                           None if cfg.tie_embeddings else "head", "embed")
+    ce = L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+    return ce, {"ce": ce}
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    """batch: src_embeds [B,Ss,d], tokens [B,St]. Returns (cache, logits)."""
+    enc_out = encode(params, cfg, batch["src_embeds"])
+    x = L.embed(params, "embed", batch["tokens"]).astype(cfg.activation_dtype)
+    stacked = subtree(params, "dec/")
+
+    def body(x, p_l):
+        x, c = _dec_layer(p_l, cfg, x, enc_out=enc_out, mode="prefill")
+        return x, c
+
+    x, caches = maybe_scan(body, x, stacked, cfg.scan_layers)
+    x = L.rmsnorm(params, "ln_f", x, cfg.norm_eps)
+    logits = L.logits_head(params, x[:, -1],
+                           None if cfg.tie_embeddings else "head", "embed")
+    cache = {f"dec/{k}": v for k, v in caches.items()}
+    cache["pos"] = jnp.asarray(batch["tokens"].shape[1], jnp.int32)
+    return cache, logits
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    pos = cache["pos"]
+    x = L.embed(params, "embed", tokens).astype(cfg.activation_dtype)
+    stacked = subtree(params, "dec/")
+    dc = subtree(cache, "dec/")
+
+    def body(x, xs):
+        p_l, c_l = xs
+        x, c = _dec_layer(p_l, cfg, x, xkv=(c_l["xk"], c_l["xv"]),
+                          mode="decode", cache_l=c_l, pos=pos)
+        c["xk"], c["xv"] = c_l["xk"], c_l["xv"]
+        return x, c
+
+    x, upd = maybe_scan(body, x, (stacked, dc), cfg.scan_layers)
+    x = L.rmsnorm(params, "ln_f", x, cfg.norm_eps)
+    logits = L.logits_head(params, x,
+                           None if cfg.tie_embeddings else "head", "embed")
+    new_cache = {f"dec/{k}": v for k, v in upd.items()}
+    new_cache["pos"] = pos + 1
+    return new_cache, logits
+
+
+def cache_spec(cfg: ModelConfig, batch: int, smax: int,
+               src_len: int) -> Dict[str, Tuple]:
+    dt = jnp.bfloat16
+    ll = cfg.num_decoder_layers
+    kv = (ll, batch, smax, cfg.num_kv_heads, cfg.head_dim)
+    xkv = (ll, batch, src_len, cfg.num_kv_heads, cfg.head_dim)
+    ax = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    return {
+        "dec/k": (kv, dt, ax), "dec/v": (kv, dt, ax),
+        "dec/xk": (xkv, dt, ax), "dec/xv": (xkv, dt, ax),
+        "pos": ((), jnp.int32, ()),
+    }

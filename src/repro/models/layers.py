@@ -1,0 +1,538 @@
+"""Shared model layers: norms, RoPE, attention family, GLU MLP, MoE.
+
+Attention implementations (selected by ``cfg.attention_impl``):
+
+- ``naive``    — full [Sq,Skv] score matrix. Oracle for tests; O(S^2) memory.
+- ``chunked``  — flash-style double scan over (q-chunk, kv-chunk) with online
+                 softmax. O(S*chunk) memory but computes every block (2x causal
+                 FLOP waste). The paper-faithful *baseline* for §Perf.
+- ``bands``    — triangular band decomposition: band b computes blocks (i, i-b)
+                 for all i>=b as one batched einsum, unrolled over bands, flash
+                 merge across bands. Causal-optimal FLOPs, O(S*chunk) memory.
+                 Also implements local-window attention by truncating the band
+                 loop at window//chunk+1 bands (recurrentgemma, long_500k).
+
+All softmax math in fp32; inputs/outputs in the activation dtype.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import Registrar, shard
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Norms / RoPE / embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(reg: Registrar, path: str, dim: int) -> None:
+    reg.param(f"{path}/scale", (dim,), ("embed",), init="ones", dtype=F32)
+
+
+def rmsnorm(params: Dict, path: str, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(F32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * params[f"{path}/scale"]
+    return y.astype(dt)
+
+
+def rmsnorm_1d(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head qk-norm (qwen3): normalize over the trailing dim."""
+    dt = x.dtype
+    x = x.astype(F32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Split-half rotary embedding. x [..., S, ..., D]; positions [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.arange(half, dtype=F32)
+    inv = theta ** (-freq / half)                      # [half]
+    ang = positions.astype(F32)[..., None] * inv       # [..., S, half]
+    # broadcast ang to x's rank: x [..., S, H?, D] — add axes between S and D
+    extra = x.ndim - ang.ndim - 1
+    for _ in range(extra):
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_embedding(reg: Registrar, path: str, vocab: int, dim: int) -> None:
+    reg.param(f"{path}/table", (vocab, dim), ("vocab", "embed"),
+              init="normal", scale=0.02)
+
+
+def embed(params: Dict, path: str, ids: jax.Array) -> jax.Array:
+    table = params[f"{path}/table"]
+    rows = jnp.take(table, ids, axis=0)
+    s = params.get(f"{path}/table_scale")
+    if s is not None:  # int8 serving table: dequantize the gathered rows
+        rows = rows.astype(jnp.bfloat16) * s.astype(jnp.bfloat16)
+    return rows
+
+
+def W(params: Dict, key: str) -> jax.Array:
+    """Fetch a matmul weight, dequantizing int8 serving weights on the fly.
+
+    This is the LM-serving application of FENIX's Model Engine INT8 scheme:
+    weights stored int8 with a per-tensor (per-layer when scanned) scale.
+    """
+    w = params[key]
+    s = params.get(f"{key}_scale")
+    if s is not None:
+        w = w.astype(jnp.bfloat16) * s.astype(jnp.bfloat16)
+    return w
+
+
+def logits_head(params: Dict, x: jax.Array, head_path: Optional[str],
+                embed_path: str) -> jax.Array:
+    """x [..., d] -> [..., V]; tied variant reuses the embedding table."""
+    if head_path is not None:
+        w = W(params, f"{head_path}/w")                # [d, V]
+        out = jnp.einsum("...d,dv->...v", x, w, preferred_element_type=F32)
+    else:
+        t = W(params, f"{embed_path}/table")           # [V, d]
+        out = jnp.einsum("...d,vd->...v", x, t, preferred_element_type=F32)
+    return shard(out, "batch", "seq", "vocab") if out.ndim == 3 else out
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean cross-entropy, fp32-stable; labels int [..., ]; logits [..., V]."""
+    logits = logits.astype(F32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Attention core
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> Tuple[jax.Array, int]:
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def _group(q: jax.Array, hkv: int) -> jax.Array:
+    b, s, hq, d = q.shape
+    return q.reshape(b, s, hkv, hq // hkv, d)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True,
+              impl: str = "bands",
+              chunk_q: int = 1024,
+              chunk_kv: int = 1024,
+              window: Optional[int] = None,
+              kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """q [B,Sq,Hq,Dk]; k [B,Skv,Hkv,Dk]; v [B,Skv,Hkv,Dv] -> [B,Sq,Hq,Dv]."""
+    b, sq, hq, dk = q.shape
+    _, skv, hkv, _ = k.shape
+    dv = v.shape[-1]
+    scale = dk ** -0.5
+    if impl == "naive":
+        qg = _group(q, hkv)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=F32)
+        s = s * scale
+        qpos = jnp.arange(sq)[:, None] + (skv - sq if causal else 0)
+        kpos = jnp.arange(skv)[None, :]
+        mask = jnp.ones((sq, skv), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        if kv_len is not None:
+            mask = mask[None] & (kpos[None] < kv_len[:, None, None])
+            s = jnp.where(mask[:, None, None], s, -jnp.inf)
+        else:
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhe->bqhge", p.astype(v.dtype), v)
+        return o.reshape(b, sq, hq, dv)
+    if impl == "chunked":
+        return _chunked_attention(q, k, v, causal=causal, chunk_q=chunk_q,
+                                  chunk_kv=chunk_kv, window=window,
+                                  kv_len=kv_len, scale=scale)
+    if impl == "bands":
+        if not causal or sq != skv:
+            # bands requires the square causal layout; use the unrolled
+            # kv-block loop (no while op => exact cost_analysis flops)
+            return _xblock_attention(q, k, v, causal=causal,
+                                     chunk_kv=chunk_kv, window=window,
+                                     kv_len=kv_len, scale=scale)
+        return _band_attention(q, k, v, chunk=chunk_q, window=window,
+                               scale=scale)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def _xblock_attention(q, k, v, *, causal, chunk_kv, window, kv_len, scale):
+    """Flash merge over an *unrolled* python loop of KV chunks.
+
+    Used for cross/encoder attention: O(Sq*chunk) score memory, no while
+    loops (cost_analysis counts every block).
+    """
+    b, sq, hq, dk = q.shape
+    _, skv, hkv, _ = k.shape
+    dv = v.shape[-1]
+    g = hq // hkv
+    ck = min(chunk_kv, skv)
+    k, _ = _pad_to(k, 1, ck)
+    v, _ = _pad_to(v, 1, ck)
+    nk = k.shape[1] // ck
+    qg = q.reshape(b, sq, hkv, g, dk)
+    qpos = jnp.arange(sq)[:, None] + (skv - sq if causal else 0)
+    m = jnp.full((b, hkv, g, sq), -jnp.inf, F32)
+    l = jnp.zeros((b, hkv, g, sq), F32)
+    acc = jnp.zeros((b, hkv, g, sq, dv), F32)
+    for ki in range(nk):
+        kb = k[:, ki * ck:(ki + 1) * ck]
+        vb = v[:, ki * ck:(ki + 1) * ck]
+        kpos = ki * ck + jnp.arange(ck)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb,
+                       preferred_element_type=F32) * scale
+        msk = jnp.broadcast_to((kpos < skv)[None, :], (sq, ck))
+        if causal:
+            msk = msk & (kpos[None, :] <= qpos)
+        if window is not None:
+            msk = msk & ((qpos - kpos[None, :]) < window)
+        if kv_len is not None:
+            mskb = msk[None] & (kpos[None, None, :] < kv_len[:, None, None])
+            s = jnp.where(mskb[:, None, None], s, -jnp.inf)
+        else:
+            s = jnp.where(msk[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isinf(s), 0.0, p)
+        corr = jnp.exp(jnp.where(jnp.isinf(m), 0.0, m) - m_safe)
+        corr = jnp.where(jnp.isinf(m), 0.0, corr)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] \
+            + jnp.einsum("bhgqk,bkhe->bhgqe", p.astype(v.dtype), vb).astype(F32)
+        m = m_new
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, dv).astype(v.dtype)
+
+
+def _chunked_attention(q, k, v, *, causal, chunk_q, chunk_kv, window, kv_len,
+                       scale):
+    b, sq, hq, dk = q.shape
+    _, skv, hkv, _ = k.shape
+    dv = v.shape[-1]
+    g = hq // hkv
+    cq = min(chunk_q, sq)
+    ck = min(chunk_kv, skv)
+    q, pq = _pad_to(q, 1, cq)
+    k, pk = _pad_to(k, 1, ck)
+    v, _ = _pad_to(v, 1, ck)
+    nq, nk = q.shape[1] // cq, k.shape[1] // ck
+    q_r = q.reshape(b, nq, cq, hkv, g, dk).transpose(1, 0, 2, 3, 4, 5)
+    k_r = k.reshape(b, nk, ck, hkv, dk).transpose(1, 0, 2, 3, 4)
+    v_r = v.reshape(b, nk, ck, hkv, dv).transpose(1, 0, 2, 3, 4)
+    off = skv - sq if causal else 0
+    eff_len = kv_len if kv_len is not None else jnp.full((b,), skv)
+
+    def q_step(_, qc):
+        qi, qb = qc                                   # [], [B,cq,hkv,g,dk]
+        qpos = qi * cq + jnp.arange(cq) + off         # [cq]
+
+        def kv_step(carry, kc):
+            m, l, acc = carry
+            ki, kb, vb = kc
+            kpos = ki * ck + jnp.arange(ck)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                           preferred_element_type=F32) * scale
+            msk = jnp.ones((cq, ck), bool)
+            if causal:
+                msk &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                msk &= (qpos[:, None] - kpos[None, :]) < window
+            msk = msk[None] & (kpos[None, None, :] < eff_len[:, None, None])
+            s = jnp.where(msk[:, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isinf(s), 0.0, p)
+            corr = jnp.exp(jnp.where(jnp.isinf(m), 0.0, m) - m_safe)
+            corr = jnp.where(jnp.isinf(m), 0.0, corr)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            o = jnp.einsum("bhgqk,bkhe->bhgqe", p.astype(v.dtype), vb)
+            acc_new = acc * corr[..., None] + o.astype(F32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, cq), -jnp.inf, F32)
+        l0 = jnp.zeros((b, hkv, g, cq), F32)
+        a0 = jnp.zeros((b, hkv, g, cq, dv), F32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), k_r, v_r))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), q_r))
+    # outs [nq, B, hkv, g, cq, dv] -> [B, S, Hq, dv]
+    outs = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * cq, hq, dv)
+    return outs[:, :sq].astype(v.dtype)
+
+
+def _band_attention(q, k, v, *, chunk, window, scale):
+    b, s, hq, dk = q.shape
+    hkv = k.shape[2]
+    dv = v.shape[-1]
+    g = hq // hkv
+    c = min(chunk, s)
+    q, pad = _pad_to(q, 1, c)
+    k, _ = _pad_to(k, 1, c)
+    v, _ = _pad_to(v, 1, c)
+    sp = q.shape[1]
+    n = sp // c
+    q_r = q.reshape(b, n, c, hkv, g, dk)
+    k_r = k.reshape(b, n, c, hkv, dk)
+    v_r = v.reshape(b, n, c, hkv, dv)
+    # band b touches offsets [b*c-(c-1), b*c+(c-1)]; include every band
+    # whose minimum offset is still inside the window
+    n_bands = n if window is None else min(n, (window + c - 2) // c + 1)
+
+    m = jnp.full((b, n, hkv, g, c), -jnp.inf, F32)
+    l = jnp.zeros((b, n, hkv, g, c), F32)
+    acc = jnp.zeros((b, n, hkv, g, c, dv), F32)
+    qi_in = jnp.arange(c)[:, None]
+    ki_in = jnp.arange(c)[None, :]
+    valid_k = jnp.arange(sp) < s                       # kv padding mask
+
+    for band in range(n_bands):
+        nb = n - band
+        qs = q_r[:, band:]                             # [B,nb,c,hkv,g,dk]
+        ks = k_r[:, :nb]
+        vs = v_r[:, :nb]
+        sco = jnp.einsum("bnqhgd,bnkhd->bnhgqk", qs, ks,
+                         preferred_element_type=F32) * scale
+        offs = band * c + qi_in - ki_in                # [c,c] distance q-k
+        msk = offs >= 0
+        if window is not None:
+            msk &= offs < window
+        kmask = valid_k[:nb * c].reshape(nb, c)        # [nb,c]
+        full_mask = msk[None, None, None, None] & kmask[None, :, None, None, None, :]
+        sco = jnp.where(full_mask, sco, -jnp.inf)
+        m_old = m[:, band:]
+        m_new = jnp.maximum(m_old, jnp.max(sco, axis=-1))
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(sco - m_safe[..., None])
+        p = jnp.where(jnp.isinf(sco), 0.0, p)
+        corr = jnp.exp(jnp.where(jnp.isinf(m_old), 0.0, m_old) - m_safe)
+        corr = jnp.where(jnp.isinf(m_old), 0.0, corr)
+        l = l.at[:, band:].set(l[:, band:] * corr + jnp.sum(p, axis=-1))
+        o = jnp.einsum("bnhgqk,bnkhe->bnhgqe", p.astype(v.dtype), vs)
+        acc = acc.at[:, band:].set(acc[:, band:] * corr[..., None] + o.astype(F32))
+        m = m.at[:, band:].set(m_new)
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(b, sp, hq, dv)
+    return out[:, :s].astype(v.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array,
+                     window: Optional[int] = None) -> jax.Array:
+    """Single-token attention. q [B,Hq,Dk]; caches [B,Smax,Hkv,D*]; lengths [B].
+
+    The KV cache is annotated with kv_seq sharding (sequence-sharded decode):
+    softmax partial reductions over the sharded axis become the measured
+    all-reduces in the roofline.
+    """
+    b, hq, dk = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, dk)
+    k_cache = shard(k_cache, "batch", "kv_seq", "kv_heads", "head_dim")
+    v_cache = shard(v_cache, "batch", "kv_seq", "kv_heads", "head_dim")
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=F32) * (dk ** -0.5)
+    kpos = jnp.arange(smax)[None, :]
+    mask = kpos < lengths[:, None]
+    if window is not None:
+        mask &= kpos > (lengths[:, None] - 1 - window)
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshe->bhge", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, hq, dv)
+
+
+# ---------------------------------------------------------------------------
+# Dense projections / MLP
+# ---------------------------------------------------------------------------
+
+
+def init_dense(reg: Registrar, path: str, shape, axes, bias: bool = False,
+               bias_axes=None, scale: Optional[float] = None) -> None:
+    reg.param(f"{path}/w", shape, axes, init="normal", scale=scale)
+    if bias:
+        bshape = shape[len(shape) - len(bias_axes):] if bias_axes else (shape[-1],)
+        reg.param(f"{path}/b", bshape, bias_axes or (axes[-1],), init="zeros")
+
+
+def dense(params: Dict, path: str, x: jax.Array, eq: str) -> jax.Array:
+    y = jnp.einsum(eq, x, W(params, f"{path}/w"))
+    if f"{path}/b" in params:
+        y = y + params[f"{path}/b"]
+    return y
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def init_glu_mlp(reg: Registrar, path: str, d: int, f: int,
+                 stack: Tuple[int, ...] = ()) -> None:
+    sa = tuple("stack" for _ in stack)
+    reg.param(f"{path}/wi_gate", (*stack, d, f), (*sa, "embed", "ffn"),
+              init="normal", scale=d ** -0.5)
+    reg.param(f"{path}/wi_up", (*stack, d, f), (*sa, "embed", "ffn"),
+              init="normal", scale=d ** -0.5)
+    reg.param(f"{path}/wo", (*stack, f, d), (*sa, "ffn", "embed"),
+              init="normal", scale=f ** -0.5)
+
+
+def glu_mlp(params: Dict, path: str, x: jax.Array, act: str) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, W(params, f"{path}/wi_gate"))
+    u = jnp.einsum("...d,df->...f", x, W(params, f"{path}/wi_up"))
+    h = _act(act, g) * u
+    if h.ndim == 3:
+        h = shard(h, "batch", "seq", "ffn")
+    return jnp.einsum("...f,fd->...d", h, W(params, f"{path}/wo"))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (sort-based capacity dispatch)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(reg: Registrar, path: str, d: int, moe) -> None:
+    e, f = moe.num_experts, moe.expert_d_ff
+    reg.param(f"{path}/router/w", (d, e), ("embed", "experts"),
+              init="normal", scale=d ** -0.5, dtype=F32)
+    for nm in ("wi_gate", "wi_up"):
+        reg.param(f"{path}/experts/{nm}", (e, d, f),
+                  ("experts", "embed", "ffn"), init="normal", scale=d ** -0.5)
+    reg.param(f"{path}/experts/wo", (e, f, d), ("experts", "ffn", "embed"),
+              init="normal", scale=f ** -0.5)
+    if moe.num_shared_experts:
+        init_glu_mlp(reg, f"{path}/shared", d, moe.shared_d_ff)
+        if moe.shared_gated:
+            reg.param(f"{path}/shared_gate/w", (d, 1), ("embed", "classes"),
+                      init="normal", scale=d ** -0.5)
+
+
+def moe_ffn(params: Dict, path: str, x: jax.Array, moe, act: str
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x [B,S,d] -> (y [B,S,d], aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = moe.num_experts, moe.top_k
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(F32), params[f"{path}/router/w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                  # [t,k]
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch-style)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_i, e, dtype=F32).sum(1), axis=0)  # [e]
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs) * moe.aux_loss_weight
+
+    cap = max(1, int(moe.capacity_factor * t * k / e))
+    flat_e = top_i.reshape(-1)                              # [t*k]
+    sort_idx = jnp.argsort(flat_e)
+    sorted_e = flat_e[sort_idx]
+    token_of = sort_idx // k
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(t * k) - starts[sorted_e]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)  # OOB => drop
+
+    token_of = shard(token_of, "moe_tokens")
+    slot = shard(slot, "moe_tokens")
+    buf = shard(jnp.zeros((e * cap, d), x.dtype), "moe_flat", "embed")
+    # chunked dispatch bounds the replicated gather working set to
+    # (t*k/chunks, d): GSPMD materializes gathers with computed indices
+    # replicated, so the chunk count is a direct memory lever (§Perf).
+    nc = max(1, int(moe.dispatch_chunks))
+    csz = (t * k + nc - 1) // nc
+    xf_g = xf
+    if nc > 1:
+        # one explicit all-gather of the token matrix per layer (~d*T bf16)
+        # beats GSPMD's permute-chain lowering of sharded computed-index
+        # gathers by ~2 orders of magnitude in moved bytes (§Perf A8)
+        from repro.models.param import replicate
+        xf_g = replicate(xf)
+    for ci in range(nc):
+        sl = slice(ci * csz, min((ci + 1) * csz, t * k))
+        g_c = shard(xf_g[token_of[sl]], "moe_tokens", "embed")
+        buf = buf.at[slot[sl]].set(g_c, mode="drop")
+    # flat rows are grouped by expert, so row-sharding == expert-sharding
+    buf = shard(buf, "moe_flat", "embed")
+    buf = buf.reshape(e, cap, d)
+    buf = shard(buf, "experts", "expert_cap", "embed")
+
+    g = jnp.einsum("ecd,edf->ecf", buf, W(params, f"{path}/experts/wi_gate"))
+    u = jnp.einsum("ecd,edf->ecf", buf, W(params, f"{path}/experts/wi_up"))
+    h = _act(act, g) * u
+    h = shard(h, "experts", "expert_cap", "ffn")
+    y_e = jnp.einsum("ecf,efd->ecd", h, W(params, f"{path}/experts/wo"))
+    y_e = shard(y_e, "experts", "expert_cap", "embed")
+
+    y_flat = shard(y_e.reshape(e * cap, d), "moe_flat", "embed")
+    w = jnp.where(keep, top_w.reshape(-1)[sort_idx], 0.0)   # [t*k]
+    y = shard(jnp.zeros((t, d), x.dtype), "moe_tokens", "embed")
+    # combine mirrors the chunked dispatch: gather expert outputs in
+    # replicated chunks (local masked gather), scatter-add into the
+    # token-sharded accumulator (local masked scatter) — avoids GSPMD's
+    # mask+all-reduce lowering of computed-index gathers (§Perf A6/A7)
+    for ci in range(nc):
+        sl = slice(ci * csz, min((ci + 1) * csz, t * k))
+        c_c = jnp.take(y_flat, slot[sl], axis=0, mode="fill",
+                       fill_value=0) * w[sl, None].astype(x.dtype)
+        y = y.at[token_of[sl]].add(c_c)
+    y = shard(y, "moe_tokens", "embed")
+
+    if moe.num_shared_experts:
+        sh = glu_mlp(params, f"{path}/shared", xf, act)
+        if moe.shared_gated:
+            gate = jax.nn.sigmoid(
+                jnp.einsum("td,dz->tz", xf, params[f"{path}/shared_gate/w"]))
+            sh = sh * gate.astype(x.dtype)
+        y = y + sh
+    return y.reshape(b, s, d), aux

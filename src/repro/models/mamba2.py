@@ -1,0 +1,300 @@
+"""Mamba2 (SSD — state-space duality) LM. Attention-free; sub-quadratic.
+
+Chunked SSD algorithm (Dao & Gu 2024, arXiv:2405.21060):
+  within-chunk quadratic term (diagonal blocks of the semiseparable matrix)
+  + inter-chunk low-rank term carried by a sequential scan over chunk states.
+
+Train/prefill cost: O(S * Q) attention-free; decode: O(1) state update.
+State per layer: conv tail [B, d_conv-1, conv_dim] + SSM state [B, H, P, N].
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import Registrar, maybe_scan, shard, subtree
+from repro.models.transformer import _Stacked, _remat
+
+F32 = jnp.float32
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, n_heads, conv_dim
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(reg, cfg: ModelConfig) -> None:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in, h, conv_dim = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    L.init_rmsnorm(reg, "ln", d)
+    reg.param("wz/w", (d, d_in), ("embed", "ssm_inner"), scale=d ** -0.5)
+    reg.param("wx/w", (d, d_in), ("embed", "ssm_inner"), scale=d ** -0.5)
+    reg.param("wb/w", (d, gn), ("embed", "state"), scale=d ** -0.5)
+    reg.param("wc/w", (d, gn), ("embed", "state"), scale=d ** -0.5)
+    reg.param("wdt/w", (d, h), ("embed", "ssm_heads"), scale=d ** -0.5)
+    reg.param("conv/w", (s.d_conv, conv_dim), ("conv", "ssm_inner"),
+              init="normal", scale=s.d_conv ** -0.5)
+    reg.param("conv/b", (conv_dim,), ("ssm_inner",), init="zeros")
+    reg.param("A_log", (h,), ("ssm_heads",), init="uniform", scale=1.0,
+              dtype=F32)
+    reg.param("D", (h,), ("ssm_heads",), init="ones", dtype=F32)
+    reg.param("dt_bias", (h,), ("ssm_heads",), init="zeros", dtype=F32)
+    reg.param("gnorm/scale", (d_in,), ("ssm_inner",), init="ones", dtype=F32)
+    reg.param("wo/w", (d_in, d), ("ssm_inner", "embed"), scale=d_in ** -0.5)
+
+
+def init_params(reg: Registrar, cfg: ModelConfig) -> None:
+    L.init_embedding(reg, "embed", cfg.vocab_size, cfg.d_model)
+    _init_block(_Stacked(reg, cfg.num_layers, "layers/"), cfg)
+    L.init_rmsnorm(reg, "ln_f", cfg.d_model)
+    if not cfg.tie_embeddings:
+        reg.param("head/w", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                  scale=cfg.d_model ** -0.5)
+
+
+# ---------------------------------------------------------------------------
+# Core SSD math
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d: x [B,S,C]; w [K,C]. O(K) shifted adds."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    s = x.shape[1]
+    y = sum(xp[:, j:j + s] * w[j] for j in range(k))
+    return y + b
+
+
+def _ssd_chunked(xdt, dA, b_r, c_r, cfg: ModelConfig, h0=None):
+    """Chunked SSD.
+
+    xdt [B,S,G,R,P] (dt-scaled inputs), dA [B,S,G,R] (log decay),
+    b_r/c_r [B,S,G,N].  Returns (y [B,S,G,R,P], h_last [B,G,R,P,N]).
+    """
+    bsz, s, g, r, p = xdt.shape
+    n = b_r.shape[-1]
+    q = min(cfg.ssm.chunk_size, s)
+    pad = (-s) % q
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_r = jnp.pad(b_r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_r = jnp.pad(c_r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // q
+    xdt = xdt.reshape(bsz, nc, q, g, r, p)
+    dA = dA.reshape(bsz, nc, q, g, r)
+    b_c = b_r.reshape(bsz, nc, q, g, n)
+    c_c = c_r.reshape(bsz, nc, q, g, n)
+
+    a_cs = jnp.cumsum(dA, axis=2)                     # [B,nc,Q,G,R]
+    # within-chunk (diagonal) term
+    scores = jnp.einsum("bclgn,bcsgn->bcgls", c_c, b_c,
+                        preferred_element_type=F32)   # [B,nc,G,Q,Q]
+    decay = a_cs[:, :, :, None] - a_cs[:, :, None]    # [B,nc,Ql,Qs,G,R]
+    decay = decay.transpose(0, 1, 4, 5, 2, 3)         # [B,nc,G,R,Ql,Qs]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.where(mask, jnp.exp(decay), 0.0)
+    st = scores[:, :, :, None] * lmat                 # [B,nc,G,R,Ql,Qs]
+    y_diag = jnp.einsum("bcgrls,bcsgrp->bclgrp", st.astype(xdt.dtype), xdt)
+
+    # chunk states
+    dstate = jnp.exp(a_cs[:, :, -1:, :, :] - a_cs)    # [B,nc,Q,G,R]
+    xw = xdt * dstate[..., None].astype(xdt.dtype)
+    states = jnp.einsum("bcsgn,bcsgrp->bcgrpn", b_c, xw)  # [B,nc,G,R,P,N]
+
+    # inter-chunk sequential scan
+    a_sum = a_cs[:, :, -1]                            # [B,nc,G,R]
+
+    def step(h, xs):
+        st_c, dec_c = xs                              # [B,G,R,P,N], [B,G,R]
+        h_new = h * jnp.exp(dec_c)[..., None, None].astype(h.dtype) + st_c
+        return h_new, h                               # emit h_prev
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, g, r, p, n), F32)
+    h_last, h_prev = jax.lax.scan(
+        step, h0, (states.astype(F32).transpose(1, 0, 2, 3, 4, 5),
+                   a_sum.transpose(1, 0, 2, 3)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4, 5)       # [B,nc,G,R,P,N]
+
+    decay_in = jnp.exp(a_cs)                          # [B,nc,Q,G,R]
+    y_off = jnp.einsum("bclgn,bcgrpn,bclgr->bclgrp", c_c,
+                       h_prev.astype(xdt.dtype),
+                       decay_in.astype(xdt.dtype))
+    y = (y_diag + y_off).reshape(bsz, sp, g, r, p)[:, :s]
+    return y, h_last
+
+
+def _block_seq(p, cfg: ModelConfig, x, h0=None, conv0=None):
+    """Full-sequence block. x [B,S,d] -> (y, (conv_tail, h_last))."""
+    s_cfg = cfg.ssm
+    d_in, h, conv_dim = _dims(cfg)
+    g, r = s_cfg.n_groups, (d_in // s_cfg.head_dim) // s_cfg.n_groups
+    pdim, n = s_cfg.head_dim, s_cfg.d_state
+    bsz, s, _ = x.shape
+    hx = L.rmsnorm(p, "ln", x, cfg.norm_eps)
+    z = L.dense(p, "wz", hx, "...d,di->...i")
+    xbc = jnp.concatenate([
+        L.dense(p, "wx", hx, "...d,di->...i"),
+        L.dense(p, "wb", hx, "...d,di->...i"),
+        L.dense(p, "wc", hx, "...d,di->...i")], axis=-1)
+    if conv0 is not None:
+        xbc_in = jnp.concatenate([conv0, xbc], axis=1)
+        conv_tail = xbc_in[:, -(s_cfg.d_conv - 1):]
+        y = _causal_conv(xbc_in, p["conv/w"], p["conv/b"])[:, -s:]
+    else:
+        conv_tail = xbc[:, max(0, s - (s_cfg.d_conv - 1)):]
+        if conv_tail.shape[1] < s_cfg.d_conv - 1:
+            conv_tail = jnp.pad(
+                conv_tail,
+                ((0, 0), (s_cfg.d_conv - 1 - conv_tail.shape[1], 0), (0, 0)))
+        y = _causal_conv(xbc, p["conv/w"], p["conv/b"])
+    y = jax.nn.silu(y)
+    xs, bs, cs = jnp.split(y, [d_in, d_in + g * n], axis=-1)
+    dt = jax.nn.softplus(
+        L.dense(p, "wdt", hx, "...d,dh->...h").astype(F32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])                          # [H]
+    dA = (dt * a).reshape(bsz, s, g, r)
+    xs = xs.reshape(bsz, s, g, r, pdim)
+    xs = shard(xs, "batch", "seq", "groups", "ssm_heads", "head_dim")
+    xdt = xs * dt.reshape(bsz, s, g, r)[..., None].astype(xs.dtype)
+    b_r = bs.reshape(bsz, s, g, n)
+    c_r = cs.reshape(bsz, s, g, n)
+    yss, h_last = _ssd_chunked(xdt, dA, b_r, c_r, cfg, h0=h0)
+    yss = yss + xs * p["D"].reshape(g, r)[..., None].astype(xs.dtype)
+    yf = yss.reshape(bsz, s, d_in)
+    yf = L.rmsnorm_1d(p["gnorm/scale"], yf * jax.nn.silu(z), cfg.norm_eps)
+    out = L.dense(p, "wo", yf, "...i,id->...d")
+    return shard(x + out, "batch", "act_seq", "embed"), (conv_tail, h_last)
+
+
+def _block_decode(p, cfg: ModelConfig, x, conv_state, h_state):
+    """Single-token step. x [B,d]; conv_state [B,K-1,C]; h [B,G,R,P,N]."""
+    s_cfg = cfg.ssm
+    d_in, h, conv_dim = _dims(cfg)
+    g, r = s_cfg.n_groups, (d_in // s_cfg.head_dim) // s_cfg.n_groups
+    pdim, n = s_cfg.head_dim, s_cfg.d_state
+    bsz = x.shape[0]
+    hx = L.rmsnorm(p, "ln", x, cfg.norm_eps)
+    z = L.dense(p, "wz", hx, "...d,di->...i")
+    xbc = jnp.concatenate([
+        L.dense(p, "wx", hx, "...d,di->...i"),
+        L.dense(p, "wb", hx, "...d,di->...i"),
+        L.dense(p, "wc", hx, "...d,di->...i")], axis=-1)  # [B,C]
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # [B,K,C]
+    y = jnp.einsum("bkc,kc->bc", window, p["conv/w"]) + p["conv/b"]
+    y = jax.nn.silu(y)
+    new_conv = window[:, 1:]
+    xs, bs, cs = jnp.split(y, [d_in, d_in + g * n], axis=-1)
+    dt = jax.nn.softplus(
+        L.dense(p, "wdt", hx, "...d,dh->...h").astype(F32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    dA = (dt * a).reshape(bsz, g, r)
+    xs = xs.reshape(bsz, g, r, pdim)
+    b_r = bs.reshape(bsz, g, n)
+    c_r = cs.reshape(bsz, g, n)
+    xdt = (xs.astype(F32) * dt.reshape(bsz, g, r)[..., None])
+    h_new = (h_state * jnp.exp(dA)[..., None, None]
+             + jnp.einsum("bgn,bgrp->bgrpn", b_r.astype(F32), xdt))
+    y_t = jnp.einsum("bgn,bgrpn->bgrp", c_r.astype(F32), h_new)
+    y_t = y_t + xs.astype(F32) * p["D"].reshape(g, r)[..., None]
+    yf = y_t.reshape(bsz, d_in).astype(x.dtype)
+    yf = L.rmsnorm_1d(p["gnorm/scale"], yf * jax.nn.silu(z), cfg.norm_eps)
+    out = L.dense(p, "wo", yf, "...i,id->...d")
+    return x + out, (new_conv, h_new)
+
+
+# ---------------------------------------------------------------------------
+# Model API
+# ---------------------------------------------------------------------------
+
+
+def forward_train(params: Dict, cfg: ModelConfig, tokens: jax.Array):
+    x = L.embed(params, "embed", tokens).astype(cfg.activation_dtype)
+    x = shard(x, "batch", "seq", "embed")
+    stacked = subtree(params, "layers/")
+
+    def body(x, p_l):
+        fn = _remat(lambda pp, xx: _block_seq(pp, cfg, xx)[0], cfg)
+        return fn(p_l, x), None
+
+    x, _ = maybe_scan(body, x, stacked, cfg.scan_layers)
+    x = L.rmsnorm(params, "ln_f", x, cfg.norm_eps)
+    logits = L.logits_head(params, x,
+                           None if cfg.tie_embeddings else "head", "embed")
+    return logits, jnp.zeros((), F32)
+
+
+def loss_fn(params, cfg, batch):
+    logits, _ = forward_train(params, cfg, batch["tokens"])
+    ce = L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+    return ce, {"ce": ce}
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: jax.Array):
+    x = L.embed(params, "embed", tokens).astype(cfg.activation_dtype)
+    stacked = subtree(params, "layers/")
+
+    def body(x, p_l):
+        x, (conv_t, h_last) = _block_seq(p_l, cfg, x)
+        return x, {"conv": conv_t, "h": h_last}
+
+    x, caches = maybe_scan(body, x, stacked, cfg.scan_layers)
+    x = L.rmsnorm(params, "ln_f", x, cfg.norm_eps)
+    logits = L.logits_head(params, x[:, -1],
+                           None if cfg.tie_embeddings else "head", "embed")
+    cache = {f"scan/{k}": v for k, v in caches.items()}
+    cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+    return cache, logits
+
+
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict, tokens: jax.Array):
+    x = L.embed(params, "embed", tokens).astype(cfg.activation_dtype)
+    stacked = subtree(params, "layers/")
+    sc = {k[len("scan/"):]: v for k, v in cache.items() if k.startswith("scan/")}
+
+    def body(x, xs):
+        p_l, conv_s, h_s = xs
+        x, (c2, h2) = _block_decode(p_l, cfg, x, conv_s, h_s)
+        return x, {"conv": c2, "h": h2}
+
+    x, upd = maybe_scan(body, x, (stacked, sc["conv"], sc["h"]),
+                        cfg.scan_layers)
+    x = L.rmsnorm(params, "ln_f", x, cfg.norm_eps)
+    logits = L.logits_head(params, x,
+                           None if cfg.tie_embeddings else "head", "embed")
+    new_cache = {f"scan/{k}": v for k, v in upd.items()}
+    new_cache["pos"] = cache["pos"] + 1
+    return new_cache, logits
+
+
+def cache_spec(cfg: ModelConfig, batch: int, smax: int) -> Dict[str, Tuple]:
+    s = cfg.ssm
+    d_in, h, conv_dim = _dims(cfg)
+    g, r = s.n_groups, (d_in // s.head_dim) // s.n_groups
+    ll = cfg.num_layers
+    return {
+        "scan/conv": ((ll, batch, s.d_conv - 1, conv_dim), jnp.bfloat16,
+                      ("layers", "batch", "conv", "ssm_inner")),
+        "scan/h": ((ll, batch, g, r, s.head_dim, s.d_state), F32,
+                   ("layers", "batch", "groups", "ssm_heads", "head_dim",
+                    "state")),
+        "pos": ((), jnp.int32, ()),
+    }

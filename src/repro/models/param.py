@@ -1,0 +1,285 @@
+"""Parameter registration + logical-axis sharding.
+
+Single source of truth for parameter shapes, dtypes, init distributions and
+*logical* sharding axes.  A ``Registrar`` is threaded through every ``init``
+function; in ``abstract`` mode it yields ``jax.ShapeDtypeStruct`` (used by the
+multi-pod dry-run — full-size configs are never materialized), in concrete
+mode it yields numpy-initialized ``jnp`` arrays (reduced smoke configs, FENIX
+traffic models).
+
+Logical axes are mapped to mesh axes through ``Rules`` (MaxText-style).  The
+mapping automatically drops a mesh axis whose size does not divide the array
+dimension (e.g. qwen2.5's 40 heads on a 16-way model axis) — the fallback is
+recorded so EXPERIMENTS.md can report it.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import hashlib
+import threading
+from typing import Any, Dict, Iterable, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Tuple[str, ...]
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+
+# ---------------------------------------------------------------------------
+# Logical -> mesh rules
+# ---------------------------------------------------------------------------
+
+# Baseline rule set (the §Perf hillclimb mutates copies of this).
+# "embed" -> (pod, data) is the FSDP axis: weights 2-D sharded (data x model).
+# TP-only (embed -> None) was rejected by memory_analysis: deepseek-v2 train
+# needs 153 GB/device with data-replicated params+Adam (see EXPERIMENTS.md).
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    # Megatron-style sequence parallelism for the saved residual stream at
+    # block boundaries (remat/scan carries shrink 16x; attention re-gathers):
+    "act_seq": "model",
+    "kv_seq": "model",        # decode-time sequence sharding of the KV cache
+    "vocab": "model",
+    "embed": ("pod", "data"),
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "qk_dim": None,
+    "v_dim": None,
+    "ffn": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "moe_flat": "model",            # flat [E*cap] rows, expert-aligned
+    "moe_tokens": ("pod", "data"),  # flat [T*k] token rows
+    "q_lora": None,
+    "kv_lora": None,
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "state": None,
+    "groups": None,
+    "lru": "model",
+    "conv": None,
+    "layers": None,
+    "blocks": None,
+    "img_seq": None,
+    "classes": None,
+    "feat": None,
+    "stack": None,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self) -> None:
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, MeshAxes] = dict(DEFAULT_RULES)
+        self.fallbacks: list = []
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Optional[Mesh], rules: Optional[Dict[str, MeshAxes]] = None):
+    """Activate a mesh + rule set; layer code then annotates activations."""
+    prev = (_CTX.mesh, _CTX.rules, _CTX.fallbacks)
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES)
+    if rules:
+        _CTX.rules.update(rules)
+    _CTX.fallbacks = []
+    try:
+        yield _CTX
+    finally:
+        _CTX.mesh, _CTX.rules, _CTX.fallbacks = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _mesh_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _filter_mesh_axes(mesh: Mesh, axes: MeshAxes) -> MeshAxes:
+    """Drop mesh axes not present in this mesh (e.g. 'pod' on single-pod)."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.axis_names else None
+    kept = tuple(a for a in axes if a in mesh.axis_names)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def spec_for(shape: Sequence[int], axes: Axes,
+             mesh: Optional[Mesh] = None,
+             rules: Optional[Dict[str, MeshAxes]] = None) -> P:
+    """PartitionSpec for ``shape`` given logical ``axes`` under active rules.
+
+    Divisibility-guarded: a mesh axis that does not divide the dimension is
+    dropped (recorded in ``_CTX.fallbacks``).
+    """
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    if mesh is None:
+        return P()
+    assert len(shape) == len(axes), (shape, axes)
+    out = []
+    used: set = set()
+    for dim, ax in zip(shape, axes):
+        m = _filter_mesh_axes(mesh, rules.get(ax))
+        if m is None:
+            out.append(None)
+            continue
+        maxes = (m,) if isinstance(m, str) else m
+        # a mesh axis may appear only once in a PartitionSpec
+        maxes = tuple(a for a in maxes if a not in used)
+        if not maxes:
+            out.append(None)
+            continue
+        size = _mesh_size(mesh, maxes)
+        if dim % size != 0:
+            _CTX.fallbacks.append((tuple(shape), ax, m, dim, size))
+            out.append(None)
+            continue
+        used.update(maxes)
+        out.append(maxes if len(maxes) > 1 else maxes[0])
+    return P(*out)
+
+
+def shard(x: jax.Array, *axes: str) -> jax.Array:
+    """with_sharding_constraint on an activation, guarded by context."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, tuple(axes))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def replicate(x: jax.Array) -> jax.Array:
+    """Force full replication (one explicit all-gather instead of leaving
+    GSPMD to thread computed-index gathers through permute chains)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*([None] * x.ndim))))
+
+
+def sharding_fallbacks() -> list:
+    return list(_CTX.fallbacks)
+
+
+# ---------------------------------------------------------------------------
+# Registrar
+# ---------------------------------------------------------------------------
+
+
+def _seed_for(path: str, seed: int) -> np.random.Generator:
+    h = hashlib.sha256(f"{seed}:{path}".encode()).digest()
+    return np.random.default_rng(int.from_bytes(h[:8], "little"))
+
+
+class Registrar:
+    """Records parameter metadata; materializes concretely or abstractly."""
+
+    def __init__(self, abstract: bool = False, seed: int = 0,
+                 dtype: Any = jnp.bfloat16):
+        self.abstract = abstract
+        self.seed = seed
+        self.default_dtype = dtype
+        self.params: Dict[str, Any] = {}
+        self.axes: Dict[str, Axes] = {}
+
+    def param(self, path: str, shape: Sequence[int], axes: Iterable[str],
+              init: str = "normal", scale: Optional[float] = None,
+              dtype: Any = None) -> Any:
+        axes = tuple(axes)
+        shape = tuple(int(s) for s in shape)
+        assert len(axes) == len(shape), (path, shape, axes)
+        assert path not in self.params, f"duplicate param {path}"
+        dtype = dtype or self.default_dtype
+        self.axes[path] = axes
+        if self.abstract:
+            val = jax.ShapeDtypeStruct(shape, dtype)
+        else:
+            rng = _seed_for(path, self.seed)
+            if init == "normal":
+                if scale is None:
+                    # fan-in scaling over the last-but-one dims heuristically:
+                    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+                    scale = fan_in ** -0.5
+                arr = rng.normal(0.0, scale, size=shape)
+            elif init == "zeros":
+                arr = np.zeros(shape)
+            elif init == "ones":
+                arr = np.ones(shape)
+            elif init == "uniform":
+                s = scale if scale is not None else 1.0
+                arr = rng.uniform(-s, s, size=shape)
+            else:
+                raise ValueError(init)
+            val = jnp.asarray(arr, dtype=dtype)
+        self.params[path] = val
+        return val
+
+    # -- helpers -----------------------------------------------------------
+    def pspecs(self, mesh: Mesh, rules: Optional[Dict[str, MeshAxes]] = None
+               ) -> Dict[str, P]:
+        return {
+            k: spec_for(v.shape, self.axes[k], mesh=mesh, rules=rules)
+            for k, v in self.params.items()
+        }
+
+
+def subtree(params: Dict[str, Any], prefix: str) -> Dict[str, Any]:
+    """Extract a flat sub-dict (keys relative to prefix)."""
+    out = {}
+    for k, v in params.items():
+        if k.startswith(prefix):
+            out[k[len(prefix):]] = v
+    return out
+
+
+def tree_pspecs(params: Dict[str, Any], axes: Dict[str, Axes], mesh: Mesh,
+                rules: Optional[Dict[str, MeshAxes]] = None) -> Dict[str, P]:
+    return {k: spec_for(v.shape, axes[k], mesh=mesh, rules=rules)
+            for k, v in params.items()}
+
+
+def maybe_scan(body, carry, stacked, use_scan: bool):
+    """lax.scan or an unrolled python loop (the no-while cost-analysis path).
+
+    ``stacked``: pytree with equal leading dims; ``body(carry, slice)`` ->
+    (carry, ys_slice) where ys_slice is None or a pytree.
+    """
+    import jax.numpy as jnp
+
+    if use_scan:
+        return jax.lax.scan(body, carry, stacked)
+    leaves = jax.tree.leaves(stacked)
+    n = leaves[0].shape[0]
+    ys_list = []
+    for i in range(n):
+        sl = jax.tree.map(lambda a: a[i], stacked)
+        carry, ys = body(carry, sl)
+        ys_list.append(ys)
+    if ys_list and ys_list[0] is not None:
+        ys = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *ys_list)
+    else:
+        ys = None
+    return carry, ys

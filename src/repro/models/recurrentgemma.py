@@ -1,0 +1,383 @@
+"""RecurrentGemma / Griffin: RG-LRU recurrent blocks + local-attention, 2:1.
+
+Layer pattern (recurrent, recurrent, attention) repeating; each layer is a
+temporal block + GeGLU MLP with pre-norms and residuals.
+
+Recurrent block: x -> [gelu(W_gate x)] * RG_LRU(conv1d(W_in x)) -> W_out.
+RG-LRU: r_t = sigma(block_diag(W_a) x_t); i_t = sigma(block_diag(W_i) x_t)
+        log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+        h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+Parallel over time via jax.lax.associative_scan (log-depth on TPU).
+
+Attention block: MQA (kv=1) with rope and a 2048-token sliding window; the
+decode cache is a *ring buffer* of window slots — the same circular-buffer
+trick as FENIX's Buffer Manager (§4.3), reused here for O(window) memory.
+Sub-quadratic => runs long_500k.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import Registrar, maybe_scan, shard, subtree
+from repro.models.transformer import _Stacked, _remat, _gqa_qkv
+
+F32 = jnp.float32
+_LRU_C = 8.0
+_N_BLOCKS = 16  # block-diagonal gate projections (Griffin appendix)
+
+
+def _w(cfg: ModelConfig) -> int:
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_recurrent(reg, cfg: ModelConfig) -> None:
+    d, w = cfg.d_model, _w(cfg)
+    L.init_rmsnorm(reg, "ln", d)
+    reg.param("wgate/w", (d, w), ("embed", "lru"), scale=d ** -0.5)
+    reg.param("win/w", (d, w), ("embed", "lru"), scale=d ** -0.5)
+    reg.param("conv/w", (cfg.hybrid.conv_width, w), ("conv", "lru"),
+              scale=cfg.hybrid.conv_width ** -0.5)
+    reg.param("conv/b", (w,), ("lru",), init="zeros")
+    nb = _N_BLOCKS
+    reg.param("wa/w", (nb, w // nb, w // nb), ("blocks", "lru", "lru"),
+              scale=(w // nb) ** -0.5)
+    reg.param("wa/b", (w,), ("lru",), init="zeros")
+    reg.param("wi/w", (nb, w // nb, w // nb), ("blocks", "lru", "lru"),
+              scale=(w // nb) ** -0.5)
+    reg.param("wi/b", (w,), ("lru",), init="zeros")
+    reg.param("lam", (w,), ("lru",), init="uniform", scale=1.0, dtype=F32)
+    reg.param("wout/w", (w, d), ("lru", "embed"), scale=w ** -0.5)
+
+
+def _init_attention(reg, cfg: ModelConfig) -> None:
+    d, h, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    L.init_rmsnorm(reg, "ln", d)
+    reg.param("attn/wq/w", (d, h, dh), ("embed", "heads", "head_dim"),
+              scale=d ** -0.5)
+    reg.param("attn/wk/w", (d, cfg.num_kv_heads, dh),
+              ("embed", "kv_heads", "head_dim"), scale=d ** -0.5)
+    reg.param("attn/wv/w", (d, cfg.num_kv_heads, dh),
+              ("embed", "kv_heads", "head_dim"), scale=d ** -0.5)
+    reg.param("attn/wo/w", (h, dh, d), ("heads", "head_dim", "embed"),
+              scale=(h * dh) ** -0.5)
+
+
+def _init_mlp(reg, cfg: ModelConfig) -> None:
+    L.init_rmsnorm(reg, "ln_mlp", cfg.d_model)
+    L.init_glu_mlp(reg, "mlp", cfg.d_model, cfg.d_ff)
+
+
+def _pattern_split(cfg: ModelConfig):
+    pat = cfg.hybrid.pattern
+    n_super = cfg.num_layers // len(pat)
+    tail = cfg.num_layers % len(pat)
+    return pat, n_super, pat[:tail]
+
+
+def init_params(reg: Registrar, cfg: ModelConfig) -> None:
+    from repro.models.transformer import _Prefixed
+
+    L.init_embedding(reg, "embed", cfg.vocab_size, cfg.d_model)
+    pat, n_super, tail = _pattern_split(cfg)
+    stk = _Stacked(reg, n_super, "sb/")
+    for j, kind in enumerate(pat):
+        sub = _Prefixed(stk, f"l{j}/")
+        (_init_recurrent if kind == "recurrent" else _init_attention)(sub, cfg)
+        _init_mlp(sub, cfg)
+    for j, kind in enumerate(tail):
+        sub = _Prefixed(reg, f"tail/l{j}/")
+        (_init_recurrent if kind == "recurrent" else _init_attention)(sub, cfg)
+        _init_mlp(sub, cfg)
+    L.init_rmsnorm(reg, "ln_f", cfg.d_model)
+    if not cfg.tie_embeddings:
+        reg.param("head/w", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                  scale=cfg.d_model ** -0.5)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def _block_diag(p, name: str, x: jax.Array) -> jax.Array:
+    """x [..., W] through block-diagonal linear [nb, W/nb, W/nb]."""
+    nb = p[f"{name}/w"].shape[0]
+    shp = x.shape
+    xr = x.reshape(*shp[:-1], nb, shp[-1] // nb)
+    y = jnp.einsum("...ni,nio->...no", xr, L.W(p, f"{name}/w"))
+    return y.reshape(shp) + p[f"{name}/b"]
+
+
+def _rg_lru_seq(p, x: jax.Array, h0=None) -> Tuple[jax.Array, jax.Array]:
+    """x [B,S,W] -> (y [B,S,W], h_last [B,W]); linear recurrence via a-scan."""
+    r = jax.nn.sigmoid(_block_diag(p, "wa", x).astype(F32))
+    i = jax.nn.sigmoid(_block_diag(p, "wi", x).astype(F32))
+    log_a = -_LRU_C * jax.nn.softplus(p["lam"]) * r          # [B,S,W] fp32
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * x.astype(F32))
+
+    def combine(l, rr):
+        al, bl = l
+        ar, br = rr
+        return al * ar, bl * ar + br
+
+    if h0 is not None:
+        # fold the carry-in into the first step: b_0 += a_0 * h0
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def _recurrent_block_seq(p, cfg, x, state=None):
+    """x [B,S,d]. state = (conv_tail, h0) or None. Returns (y, new_state)."""
+    hx = L.rmsnorm(p, "ln", x, cfg.norm_eps)
+    gate = jax.nn.gelu(L.dense(p, "wgate", hx, "...d,dw->...w"))
+    u = L.dense(p, "win", hx, "...d,dw->...w")
+    u = shard(u, "batch", "seq", "lru")
+    kw = cfg.hybrid.conv_width
+    if state is not None:
+        conv0, h0 = state
+        u_in = jnp.concatenate([conv0, u], axis=1)
+        conv_tail = u_in[:, -(kw - 1):]
+        from repro.models.mamba2 import _causal_conv
+        uc = _causal_conv(u_in, p["conv/w"], p["conv/b"])[:, -(u.shape[1]):]
+    else:
+        h0 = None
+        from repro.models.mamba2 import _causal_conv
+        conv_tail = u[:, max(0, u.shape[1] - (kw - 1)):]
+        if conv_tail.shape[1] < kw - 1:
+            conv_tail = jnp.pad(
+                conv_tail, ((0, 0), (kw - 1 - conv_tail.shape[1], 0), (0, 0)))
+        uc = _causal_conv(u, p["conv/w"], p["conv/b"])
+    y, h_last = _rg_lru_seq(p, uc, h0=h0)
+    out = L.dense(p, "wout", gate * y, "...w,wd->...d")
+    return x + out, (conv_tail, h_last)
+
+
+def _recurrent_block_step(p, cfg, x, state):
+    """Single token. x [B,d]; state (conv [B,K-1,W], h [B,W])."""
+    conv0, h0 = state
+    hx = L.rmsnorm(p, "ln", x, cfg.norm_eps)
+    gate = jax.nn.gelu(L.dense(p, "wgate", hx, "...d,dw->...w"))
+    u = L.dense(p, "win", hx, "...d,dw->...w")
+    win = jnp.concatenate([conv0, u[:, None]], axis=1)       # [B,K,W]
+    uc = jnp.einsum("bkw,kw->bw", win, p["conv/w"]) + p["conv/b"]
+    r = jax.nn.sigmoid(_block_diag(p, "wa", uc).astype(F32))
+    i = jax.nn.sigmoid(_block_diag(p, "wi", uc).astype(F32))
+    log_a = -_LRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    h = a * h0 + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * uc.astype(F32))
+    out = L.dense(p, "wout", gate * h.astype(x.dtype), "...w,wd->...d")
+    return x + out, (win[:, 1:], h)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (MQA + window; ring-buffer decode cache)
+# ---------------------------------------------------------------------------
+
+
+def _attn_block_seq(p, cfg, x, emit_cache=False):
+    hx = L.rmsnorm(p, "ln", x, cfg.norm_eps)
+    win = cfg.hybrid.attention_window
+    positions = jnp.arange(x.shape[1])[None, :]
+    q, k, v = _gqa_qkv(p, cfg, hx, positions)
+    o = L.attention(q, k, v, causal=True, impl=cfg.attention_impl,
+                    chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+                    window=win)
+    out = L.dense(p, "attn/wo", o, "...hk,hkd->...d")
+    if not emit_cache:
+        return x + out, None
+    # ring cache: the last `win` K/V entries, in ring order slot = pos % win
+    s = x.shape[1]
+    if s >= win:
+        kr = k[:, -win:]
+        vr = v[:, -win:]
+        # rotate so that slot index = position % win
+        shift = s % win
+        kr = jnp.roll(kr, shift, axis=1)
+        vr = jnp.roll(vr, shift, axis=1)
+    else:
+        kr = jnp.pad(k, ((0, 0), (0, win - s), (0, 0), (0, 0)))
+        vr = jnp.pad(v, ((0, 0), (0, win - s), (0, 0), (0, 0)))
+    return x + out, {"k": kr, "v": vr}
+
+
+def _attn_block_step(p, cfg, x, cache_l, pos):
+    b = x.shape[0]
+    win = cache_l["k"].shape[1]  # ring size
+    hx = L.rmsnorm(p, "ln", x, cfg.norm_eps)
+    posv = jnp.full((b,), pos)
+    q = L.dense(p, "attn/wq", hx, "...d,dhk->...hk")
+    k = L.dense(p, "attn/wk", hx, "...d,dhk->...hk")
+    v = L.dense(p, "attn/wv", hx, "...d,dhk->...hk")
+    q = L.rope(q, posv[:, None], cfg.rope_theta)
+    k = L.rope(k, posv[:, None], cfg.rope_theta)
+    slot = jnp.mod(pos, win)
+    kc = jax.lax.dynamic_update_slice_in_dim(cache_l["k"], k[:, None], slot, 1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache_l["v"], v[:, None], slot, 1)
+    n_valid = jnp.minimum(pos + 1, win)
+    o = L.decode_attention(q, kc, vc, jnp.full((b,), n_valid))
+    out = L.dense(p, "attn/wo", o, "...hk,hkd->...d")
+    return x + out, {"k": kc, "v": vc}
+
+
+def _mlp_block(p, cfg, x):
+    h = L.rmsnorm(p, "ln_mlp", x, cfg.norm_eps)
+    return x + L.glu_mlp(p, "mlp", h, cfg.mlp_act)
+
+
+# ---------------------------------------------------------------------------
+# Model API
+# ---------------------------------------------------------------------------
+
+
+def _layer_seq(p_l, cfg, x, kind, emit_cache):
+    if kind == "recurrent":
+        x, st = _recurrent_block_seq(p_l, cfg, x)
+        cache = {"conv": st[0], "h": st[1]} if emit_cache else None
+    else:
+        x, cache = _attn_block_seq(p_l, cfg, x, emit_cache=emit_cache)
+    x = _mlp_block(p_l, cfg, x)
+    return shard(x, "batch", "act_seq", "embed"), cache
+
+
+def _run_seq(params, cfg: ModelConfig, tokens, emit_cache: bool):
+    x = L.embed(params, "embed", tokens).astype(cfg.activation_dtype)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)   # gemma embed scaling
+    x = shard(x, "batch", "seq", "embed")
+    pat, n_super, tail = _pattern_split(cfg)
+    stacked = subtree(params, "sb/")
+
+    def body(x, p_sb):
+        caches = {}
+        for j, kind in enumerate(pat):
+            p_l = subtree(p_sb, f"l{j}/")
+            fn = _remat(lambda pp, xx, kk=kind: _layer_seq(
+                pp, cfg, xx, kk, emit_cache), cfg) if not emit_cache else \
+                (lambda pp, xx, kk=kind: _layer_seq(pp, cfg, xx, kk, True))
+            x, c = fn(p_l, x)
+            if emit_cache and c is not None:
+                for ck, cv in c.items():
+                    caches[f"l{j}/{ck}"] = cv
+        return x, caches
+
+    x, sb_caches = maybe_scan(body, x, stacked, cfg.scan_layers)
+    tail_caches = {}
+    for j, kind in enumerate(tail):
+        p_l = subtree(params, f"tail/l{j}/")
+        x, c = _layer_seq(p_l, cfg, x, kind, emit_cache)
+        if emit_cache and c is not None:
+            for ck, cv in c.items():
+                tail_caches[f"tail/l{j}/{ck}"] = cv
+    x = L.rmsnorm(params, "ln_f", x, cfg.norm_eps)
+    return x, sb_caches, tail_caches
+
+
+def forward_train(params, cfg, tokens):
+    x, _, _ = _run_seq(params, cfg, tokens, emit_cache=False)
+    logits = L.logits_head(params, x,
+                           None if cfg.tie_embeddings else "head", "embed")
+    return logits, jnp.zeros((), F32)
+
+
+def loss_fn(params, cfg, batch):
+    logits, _ = forward_train(params, cfg, batch["tokens"])
+    ce = L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+    return ce, {"ce": ce}
+
+
+def prefill(params, cfg, tokens):
+    x, sb_caches, tail_caches = _run_seq(params, cfg, tokens, emit_cache=True)
+    logits = L.logits_head(params, x[:, -1],
+                           None if cfg.tie_embeddings else "head", "embed")
+    cache = {f"sb/{k}": v for k, v in sb_caches.items()}
+    cache.update(tail_caches)
+    cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+    return cache, logits
+
+
+def decode_step(params, cfg, cache, tokens):
+    pos = cache["pos"]
+    x = L.embed(params, "embed", tokens).astype(cfg.activation_dtype)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    pat, n_super, tail = _pattern_split(cfg)
+    stacked = subtree(params, "sb/")
+    sb_cache = subtree(cache, "sb/")
+
+    def body(x, xs):
+        p_sb, c_sb = xs
+        new_c = {}
+        for j, kind in enumerate(pat):
+            p_l = subtree(p_sb, f"l{j}/")
+            c_l = subtree(c_sb, f"l{j}/")
+            if kind == "recurrent":
+                x, st = _recurrent_block_step(p_l, cfg, x,
+                                              (c_l["conv"], c_l["h"]))
+                new_c[f"l{j}/conv"], new_c[f"l{j}/h"] = st
+            else:
+                x, c2 = _attn_block_step(p_l, cfg, x, c_l, pos)
+                new_c[f"l{j}/k"], new_c[f"l{j}/v"] = c2["k"], c2["v"]
+            x = _mlp_block(p_l, cfg, x)
+        return x, new_c
+
+    x, upd = maybe_scan(body, x, (stacked, sb_cache), cfg.scan_layers)
+    new_cache = {f"sb/{k}": v for k, v in upd.items()}
+    for j, kind in enumerate(tail):
+        p_l = subtree(params, f"tail/l{j}/")
+        c_l = subtree(cache, f"tail/l{j}/")
+        if kind == "recurrent":
+            x, st = _recurrent_block_step(p_l, cfg, x, (c_l["conv"], c_l["h"]))
+            new_cache[f"tail/l{j}/conv"], new_cache[f"tail/l{j}/h"] = st
+        else:
+            x, c2 = _attn_block_step(p_l, cfg, x, c_l, pos)
+            new_cache[f"tail/l{j}/k"] = c2["k"]
+            new_cache[f"tail/l{j}/v"] = c2["v"]
+        x = _mlp_block(p_l, cfg, x)
+    x = L.rmsnorm(params, "ln_f", x, cfg.norm_eps)
+    logits = L.logits_head(params, x,
+                           None if cfg.tie_embeddings else "head", "embed")
+    new_cache["pos"] = pos + 1
+    return new_cache, logits
+
+
+def cache_spec(cfg: ModelConfig, batch: int, smax: int) -> Dict[str, Tuple]:
+    pat, n_super, tail = _pattern_split(cfg)
+    w = _w(cfg)
+    kw = cfg.hybrid.conv_width
+    win = cfg.hybrid.attention_window
+    dt = jnp.bfloat16
+    out: Dict[str, Tuple] = {}
+
+    def rec_entries(prefix, lead=()):
+        la = ("layers",) if lead else ()
+        out[f"{prefix}conv"] = ((*lead, batch, kw - 1, w), dt,
+                                (*la, "batch", "conv", "lru"))
+        out[f"{prefix}h"] = ((*lead, batch, w), F32, (*la, "batch", "lru"))
+
+    def attn_entries(prefix, lead=()):
+        la = ("layers",) if lead else ()
+        shp = (*lead, batch, win, cfg.num_kv_heads, cfg.head_dim)
+        ax = (*la, "batch", "kv_seq", "kv_heads", "head_dim")
+        out[f"{prefix}k"] = (shp, dt, ax)
+        out[f"{prefix}v"] = (shp, dt, ax)
+
+    for j, kind in enumerate(pat):
+        (rec_entries if kind == "recurrent" else attn_entries)(
+            f"sb/l{j}/", lead=(n_super,))
+    for j, kind in enumerate(tail):
+        (rec_entries if kind == "recurrent" else attn_entries)(f"tail/l{j}/")
+    out["pos"] = ((), jnp.int32, ())
+    return out

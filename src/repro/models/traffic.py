@@ -1,0 +1,151 @@
+"""FENIX traffic classifiers (paper §6, §7.1 schemes a/b/d/e).
+
+FENIX-CNN: embeddings -> 3 conv1d layers (64,128,256 filters, k=3, relu)
+           -> global average pool -> FC 512 -> FC 256 -> classes.
+FENIX-RNN: embeddings -> custom RNN cell (128 units, tanh) -> dense output.
+
+Features are the paper's protocol-agnostic modality: sequences of packet
+lengths and inter-packet delays (raw int32), bucketized into embedding ids
+(the FPGA maps embeddings to LUTs, §5.2).  Float paths train; the quantized
+INT8 path (quant/quantize.py) mirrors this structure layer-for-layer onto
+the systolic GEMM kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.fenix_models import TrafficModelConfig
+from repro.models.param import Registrar
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Feature bucketization (integer-only; switch/FPGA friendly)
+# ---------------------------------------------------------------------------
+
+
+def bucketize(payload: jax.Array, cfg: TrafficModelConfig) -> jax.Array:
+    """payload [..., T, 2] int32 (len, ipd_us) -> ids [..., T, 2] int32.
+
+    len buckets: len >> 5 (32-byte granularity).  ipd buckets: 2 * floor
+    log2(1+ipd) (logarithmic time bins).  Both clip to the table size.
+    """
+    ln = jnp.clip(payload[..., 0] >> 5, 0, cfg.len_buckets - 1)
+    ipd = jnp.maximum(payload[..., 1], 0)
+    lg = jnp.floor(jnp.log2(1.0 + ipd.astype(F32))).astype(jnp.int32)
+    ip = jnp.clip(2 * lg, 0, cfg.ipd_buckets - 1)
+    return jnp.stack([ln, ip], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(reg: Registrar, cfg: TrafficModelConfig) -> None:
+    e = cfg.embed_dim
+    reg.param("embed_len/table", (cfg.len_buckets, e), ("vocab", "embed"),
+              scale=0.5, dtype=F32)
+    reg.param("embed_ipd/table", (cfg.ipd_buckets, e), ("vocab", "embed"),
+              scale=0.5, dtype=F32)
+    d_in = 2 * e
+    if cfg.kind == "cnn":
+        c_prev = d_in
+        for i, ch in enumerate(cfg.conv_filters):
+            reg.param(f"conv{i}/w", (cfg.conv_kernel, c_prev, ch),
+                      ("conv", "embed", "ffn"), scale=(cfg.conv_kernel
+                                                       * c_prev) ** -0.5,
+                      dtype=F32)
+            reg.param(f"conv{i}/b", (ch,), ("ffn",), init="zeros", dtype=F32)
+            c_prev = ch
+        f_prev = c_prev
+        for i, fc in enumerate(cfg.fc_dims):
+            reg.param(f"fc{i}/w", (f_prev, fc), ("embed", "ffn"),
+                      scale=f_prev ** -0.5, dtype=F32)
+            reg.param(f"fc{i}/b", (fc,), ("ffn",), init="zeros", dtype=F32)
+            f_prev = fc
+        reg.param("head/w", (f_prev, cfg.num_classes), ("embed", "classes"),
+                  scale=f_prev ** -0.5, dtype=F32)
+        reg.param("head/b", (cfg.num_classes,), ("classes",), init="zeros",
+                  dtype=F32)
+    else:  # rnn
+        u = cfg.rnn_units
+        reg.param("cell/wx", (d_in, u), ("embed", "ffn"), scale=d_in ** -0.5,
+                  dtype=F32)
+        reg.param("cell/wh", (u, u), ("ffn", "ffn"), scale=u ** -0.5,
+                  dtype=F32)
+        reg.param("cell/b", (u,), ("ffn",), init="zeros", dtype=F32)
+        reg.param("head/w", (u, cfg.num_classes), ("embed", "classes"),
+                  scale=u ** -0.5, dtype=F32)
+        reg.param("head/b", (cfg.num_classes,), ("classes",), init="zeros",
+                  dtype=F32)
+
+
+def init(cfg: TrafficModelConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    reg = Registrar(abstract=False, seed=seed, dtype=F32)
+    init_params(reg, cfg)
+    return reg.params
+
+
+# ---------------------------------------------------------------------------
+# Float forward (training / fp oracle)
+# ---------------------------------------------------------------------------
+
+
+def embed_ids(params: Dict, ids: jax.Array) -> jax.Array:
+    """ids [..., T, 2] -> [..., T, 2E] float."""
+    el = jnp.take(params["embed_len/table"], ids[..., 0], axis=0)
+    ei = jnp.take(params["embed_ipd/table"], ids[..., 1], axis=0)
+    return jnp.concatenate([el, ei], axis=-1)
+
+
+def _conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """'same' conv1d via im2col (mirrors the int8 path exactly)."""
+    k = w.shape[0]
+    pad = k // 2
+    s = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (pad, k - 1 - pad), (0, 0)))
+    cols = jnp.stack([xp[:, i:i + s] for i in range(k)], axis=2)
+    return jnp.einsum("bskc,kcf->bsf",
+                      cols.reshape(*cols.shape[:2], k, -1), w) + b
+
+
+def apply(params: Dict, cfg: TrafficModelConfig,
+          payload: jax.Array) -> jax.Array:
+    """payload [B,T,2] int32 -> logits [B,classes] (float path)."""
+    ids = bucketize(payload, cfg)
+    x = embed_ids(params, ids)                        # [B,T,2E]
+    if cfg.kind == "cnn":
+        for i in range(len(cfg.conv_filters)):
+            x = jax.nn.relu(_conv1d(x, params[f"conv{i}/w"],
+                                    params[f"conv{i}/b"]))
+        x = jnp.mean(x, axis=1)                       # global average pool
+        for i in range(len(cfg.fc_dims)):
+            x = jax.nn.relu(x @ params[f"fc{i}/w"] + params[f"fc{i}/b"])
+        return x @ params["head/w"] + params["head/b"]
+    # rnn
+    def cell(h, xt):
+        h = jnp.tanh(xt @ params["cell/wx"] + h @ params["cell/wh"]
+                     + params["cell/b"])
+        return h, None
+
+    h0 = jnp.zeros((x.shape[0], cfg.rnn_units), x.dtype)
+    h, _ = jax.lax.scan(cell, h0, x.swapaxes(0, 1))
+    return h @ params["head/w"] + params["head/b"]
+
+
+def loss_fn(params: Dict, cfg: TrafficModelConfig, batch: Dict
+            ) -> Tuple[jax.Array, Dict]:
+    logits = apply(params, cfg, batch["payload"])
+    labels = batch["label"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    w = batch.get("weight")
+    loss = jnp.mean(nll * w) if w is not None else jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(F32))
+    return loss, {"acc": acc}

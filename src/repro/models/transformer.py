@@ -1,0 +1,484 @@
+"""Decoder-only transformer LM: dense + MoE, GQA + MLA, all config-driven.
+
+Covers deepseek-v2-236b (MLA + MoE), qwen2-moe-a2.7b (MoE + shared gated
+expert), llama3.2-1b / qwen2.5-14b / qwen3-4b / gemma-7b (dense GQA variants).
+
+Three entry points per the uniform Model API:
+  - ``loss_fn``     (train_4k)      — scan-over-layers + remat, CE + MoE aux
+  - ``prefill``     (prefill_32k)   — emits the KV cache + last-position logits
+  - ``decode_step`` (decode_32k)    — one token against a seq_len KV cache
+
+Cache layouts (stacked over layers for scan):
+  GQA: k,v [L, B, Smax, Hkv, Dh]     MLA: ckv [L, B, Smax, R], kpe [L,B,Smax,Dr]
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import Registrar, maybe_scan, shard, subtree
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+class _Stacked:
+    """Registrar view that prepends a stacking dim (scan over layers)."""
+
+    def __init__(self, reg: Registrar, n: int, prefix: str):
+        self.reg, self.n, self.prefix = reg, n, prefix
+
+    def param(self, path, shape, axes, **kw):
+        return self.reg.param(f"{self.prefix}{path}", (self.n, *shape),
+                              ("layers", *axes), **kw)
+
+
+def _init_attention(reg, cfg: ModelConfig, path: str = "attn") -> None:
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if cfg.attention == "mla":
+        r, dr, dn, dv = (cfg.kv_lora_rank, cfg.qk_rope_head_dim,
+                         cfg.qk_nope_head_dim, cfg.v_head_dim)
+        if cfg.q_lora_rank:
+            reg.param(f"{path}/wdq/w", (d, cfg.q_lora_rank),
+                      ("embed", "q_lora"), scale=d ** -0.5)
+            reg.param(f"{path}/q_norm/scale", (cfg.q_lora_rank,), ("q_lora",),
+                      init="ones", dtype=F32)
+            reg.param(f"{path}/wuq/w", (cfg.q_lora_rank, h, dn + dr),
+                      ("q_lora", "heads", "qk_dim"),
+                      scale=cfg.q_lora_rank ** -0.5)
+        else:
+            reg.param(f"{path}/wq/w", (d, h, dn + dr),
+                      ("embed", "heads", "qk_dim"), scale=d ** -0.5)
+        reg.param(f"{path}/wdkv/w", (d, r), ("embed", "kv_lora"),
+                  scale=d ** -0.5)
+        reg.param(f"{path}/kv_norm/scale", (r,), ("kv_lora",), init="ones",
+                  dtype=F32)
+        reg.param(f"{path}/wkr/w", (d, dr), ("embed", "qk_dim"),
+                  scale=d ** -0.5)
+        reg.param(f"{path}/wuk/w", (r, h, dn), ("kv_lora", "heads", "qk_dim"),
+                  scale=r ** -0.5)
+        reg.param(f"{path}/wuv/w", (r, h, dv), ("kv_lora", "heads", "v_dim"),
+                  scale=r ** -0.5)
+        reg.param(f"{path}/wo/w", (h, dv, d), ("heads", "v_dim", "embed"),
+                  scale=(h * dv) ** -0.5)
+        return
+    # GQA
+    reg.param(f"{path}/wq/w", (d, h, dh), ("embed", "heads", "head_dim"),
+              scale=d ** -0.5)
+    reg.param(f"{path}/wk/w", (d, hkv, dh), ("embed", "kv_heads", "head_dim"),
+              scale=d ** -0.5)
+    reg.param(f"{path}/wv/w", (d, hkv, dh), ("embed", "kv_heads", "head_dim"),
+              scale=d ** -0.5)
+    reg.param(f"{path}/wo/w", (h, dh, d), ("heads", "head_dim", "embed"),
+              scale=(h * dh) ** -0.5)
+    if cfg.qkv_bias:
+        reg.param(f"{path}/wq/b", (h, dh), ("heads", "head_dim"), init="zeros")
+        reg.param(f"{path}/wk/b", (hkv, dh), ("kv_heads", "head_dim"),
+                  init="zeros")
+        reg.param(f"{path}/wv/b", (hkv, dh), ("kv_heads", "head_dim"),
+                  init="zeros")
+    if cfg.qk_norm:
+        reg.param(f"{path}/qnorm/scale", (dh,), ("head_dim",), init="ones",
+                  dtype=F32)
+        reg.param(f"{path}/knorm/scale", (dh,), ("head_dim",), init="ones",
+                  dtype=F32)
+
+
+def _init_block(reg, cfg: ModelConfig, mlp_kind: str, dense_ff: int = 0) -> None:
+    L.init_rmsnorm(reg, "ln_attn", cfg.d_model)
+    _init_attention(reg, cfg)
+    L.init_rmsnorm(reg, "ln_mlp", cfg.d_model)
+    if mlp_kind == "dense":
+        L.init_glu_mlp(reg, "mlp", cfg.d_model, dense_ff or cfg.d_ff)
+    else:
+        L.init_moe(reg, "moe", cfg.d_model, cfg.moe)
+
+
+def init_params(reg: Registrar, cfg: ModelConfig) -> None:
+    L.init_embedding(reg, "embed", cfg.vocab_size, cfg.d_model)
+    n_dense_first = cfg.moe.first_dense_layers if cfg.moe.num_experts else 0
+    for i in range(n_dense_first):
+        sub = _Prefixed(reg, f"layer{i}/")
+        _init_block(sub, cfg, "dense", dense_ff=cfg.moe.first_dense_d_ff)
+    n_scan = cfg.num_layers - n_dense_first
+    stk = _Stacked(reg, n_scan, "layers/")
+    _init_block(stk, cfg, "moe" if cfg.moe.num_experts else "dense")
+    L.init_rmsnorm(reg, "ln_f", cfg.d_model)
+    if not cfg.tie_embeddings:
+        reg.param("head/w", (cfg.d_model, cfg.vocab_size),
+                  ("embed", "vocab"), scale=cfg.d_model ** -0.5)
+
+
+class _Prefixed:
+    def __init__(self, reg, prefix: str):
+        self.reg, self.prefix = reg, prefix
+
+    def param(self, path, shape, axes, **kw):
+        return self.reg.param(f"{self.prefix}{path}", shape, axes, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Attention apply (all modes)
+# ---------------------------------------------------------------------------
+
+
+def _gqa_qkv(p, cfg: ModelConfig, x, positions):
+    q = L.dense(p, "attn/wq", x, "...d,dhk->...hk")
+    k = L.dense(p, "attn/wk", x, "...d,dhk->...hk")
+    v = L.dense(p, "attn/wv", x, "...d,dhk->...hk")
+    if cfg.qk_norm:
+        q = L.rmsnorm_1d(p["attn/qnorm/scale"], q, cfg.norm_eps)
+        k = L.rmsnorm_1d(p["attn/knorm/scale"], k, cfg.norm_eps)
+    # rope over the seq axis (axis -3 carries S for [B,S,H,D], absent for decode)
+    q = L.rope(q.swapaxes(-2, -3), positions, cfg.rope_theta).swapaxes(-2, -3) \
+        if x.ndim == 3 else L.rope(q, positions[..., None], cfg.rope_theta)
+    k = L.rope(k.swapaxes(-2, -3), positions, cfg.rope_theta).swapaxes(-2, -3) \
+        if x.ndim == 3 else L.rope(k, positions[..., None], cfg.rope_theta)
+    return q, k, v
+
+
+def _attn_train(p, cfg: ModelConfig, x, window=None):
+    """x [B,S,d] -> (out [B,S,d], cache_entry)."""
+    b, s, d = x.shape
+    positions = jnp.arange(s)[None, :]
+    if cfg.attention == "mla":
+        q, k, v = _mla_qkv_full(p, cfg, x, positions)
+    else:
+        q, k, v = _gqa_qkv(p, cfg, x, positions)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "seq", "kv_heads", "head_dim")
+    o = L.attention(q, k, v, causal=True, impl=cfg.attention_impl,
+                    chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+                    window=window)
+    o = shard(o, "batch", "seq", "heads", "head_dim")
+    return L.dense(p, "attn/wo", o, "...hk,hkd->...d")
+
+
+def _mla_qkv_full(p, cfg: ModelConfig, x, positions):
+    """Decompressed MLA for train/prefill: per-head K/V materialized."""
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        cq = _rms(p["attn/q_norm/scale"],
+                  L.dense(p, "attn/wdq", x, "...d,dr->...r"), cfg.norm_eps)
+        qh = jnp.einsum("...r,rhk->...hk", cq, L.W(p, "attn/wuq/w"))
+    else:
+        qh = L.dense(p, "attn/wq", x, "...d,dhk->...hk")
+    q_nope, q_pe = qh[..., :dn], qh[..., dn:]
+    ckv = _rms(p["attn/kv_norm/scale"],
+               L.dense(p, "attn/wdkv", x, "...d,dr->...r"), cfg.norm_eps)
+    k_pe = L.dense(p, "attn/wkr", x, "...d,dk->...k")      # [B,S,dr] shared
+    q_pe = L.rope(q_pe.swapaxes(-2, -3), positions, cfg.rope_theta).swapaxes(-2, -3)
+    k_pe = L.rope(k_pe, positions, cfg.rope_theta)
+    k_nope = jnp.einsum("...r,rhk->...hk", ckv, L.W(p, "attn/wuk/w"))
+    v = jnp.einsum("...r,rhe->...he", ckv, L.W(p, "attn/wuv/w"))
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[..., None, :],
+                                  (*k_nope.shape[:-1], dr))], axis=-1)
+    return q, k, v
+
+
+def _rms(scale, x, eps):
+    dt = x.dtype
+    x = x.astype(F32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale).astype(dt)
+
+
+def _attn_prefill(p, cfg: ModelConfig, x, window=None):
+    """Returns (out, cache_entry_dict)."""
+    b, s, d = x.shape
+    positions = jnp.arange(s)[None, :]
+    if cfg.attention == "mla":
+        # cache the compressed latent (the whole point of MLA)
+        ckv = _rms(p["attn/kv_norm/scale"],
+                   L.dense(p, "attn/wdkv", x, "...d,dr->...r"), cfg.norm_eps)
+        k_pe = L.rope(L.dense(p, "attn/wkr", x, "...d,dk->...k"), positions,
+                      cfg.rope_theta)
+        out = _attn_train(p, cfg, x, window=window)
+        return out, {"ckv": ckv, "kpe": k_pe}
+    q, k, v = _gqa_qkv(p, cfg, x, positions)
+    o = L.attention(q, k, v, causal=True, impl=cfg.attention_impl,
+                    chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+                    window=window)
+    out = L.dense(p, "attn/wo", o, "...hk,hkd->...d")
+    return out, {"k": _kv_store(cfg, k), "v": _kv_store(cfg, v)}
+
+
+def _attn_decode(p, cfg: ModelConfig, x, cache_l, pos, window=None):
+    """x [B,d]; cache_l per-layer dict; pos scalar. Returns (out, new cache)."""
+    b = x.shape[0]
+    lengths = jnp.full((b,), pos + 1)
+    if cfg.attention == "mla":
+        return _mla_decode(p, cfg, x, cache_l, pos, lengths)
+    posv = jnp.full((b,), pos)
+    q = L.dense(p, "attn/wq", x, "...d,dhk->...hk")
+    k = L.dense(p, "attn/wk", x, "...d,dhk->...hk")
+    v = L.dense(p, "attn/wv", x, "...d,dhk->...hk")
+    if cfg.qk_norm:
+        q = L.rmsnorm_1d(p["attn/qnorm/scale"], q, cfg.norm_eps)
+        k = L.rmsnorm_1d(p["attn/knorm/scale"], k, cfg.norm_eps)
+    q = L.rope(q, posv[:, None], cfg.rope_theta)
+    k = L.rope(k, posv[:, None], cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["k"], _kv_store(cfg, k)[:, None], pos, 1)
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["v"], _kv_store(cfg, v)[:, None], pos, 1)
+    o = L.decode_attention(q, _kv_load(cfg, kc), _kv_load(cfg, vc),
+                           lengths, window=window)
+    out = L.dense(p, "attn/wo", o, "...hk,hkd->...d")
+    return out, {"k": kc, "v": vc}
+
+
+def _mla_decode(p, cfg: ModelConfig, x, cache_l, pos, lengths):
+    """Matrix-absorbed MLA decode over the compressed latent cache."""
+    dn, dr, r = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.kv_lora_rank
+    b = x.shape[0]
+    posv = jnp.full((b,), pos)
+    if cfg.q_lora_rank:
+        cq = _rms(p["attn/q_norm/scale"],
+                  L.dense(p, "attn/wdq", x, "...d,dr->...r"), cfg.norm_eps)
+        qh = jnp.einsum("br,rhk->bhk", cq, L.W(p, "attn/wuq/w"))
+    else:
+        qh = L.dense(p, "attn/wq", x, "...d,dhk->...hk")
+    q_nope, q_pe = qh[..., :dn], qh[..., dn:]
+    q_pe = L.rope(q_pe, posv[:, None], cfg.rope_theta)
+    ckv_new = _rms(p["attn/kv_norm/scale"],
+                   L.dense(p, "attn/wdkv", x, "...d,dr->...r"), cfg.norm_eps)
+    kpe_new = L.rope(L.dense(p, "attn/wkr", x, "...d,dk->...k"),
+                     posv, cfg.rope_theta)
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["ckv"], ckv_new[:, None], pos, 1)           # [B,Smax,R]
+    kpe = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["kpe"], kpe_new[:, None], pos, 1)           # [B,Smax,dr]
+    ckv_s = shard(ckv, "batch", "kv_seq", "kv_lora")
+    # absorb W_UK into q
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope, L.W(p, "attn/wuk/w"))
+    s = (jnp.einsum("bhr,bsr->bhs", q_abs.astype(F32), ckv_s.astype(F32))
+         + jnp.einsum("bhk,bsk->bhs", q_pe.astype(F32), kpe.astype(F32)))
+    s = s * ((dn + dr) ** -0.5)
+    mask = jnp.arange(ckv.shape[1])[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None], s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", pr.astype(ckv.dtype), ckv_s)
+    v_ctx = jnp.einsum("bhr,rhe->bhe", ctx, L.W(p, "attn/wuv/w"))
+    out = L.dense(p, "attn/wo", v_ctx, "bhe,hed->bd")
+    return out, {"ckv": ckv, "kpe": kpe}
+
+
+# ---------------------------------------------------------------------------
+# Block (attention + MLP) for every mode
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(p, cfg: ModelConfig, x, mlp_kind: str, *, mode: str,
+                 cache_l=None, pos=None, window=None):
+    """Returns (x_out, aux_loss, new_cache_entry_or_None)."""
+    h = L.rmsnorm(p, "ln_attn", x, cfg.norm_eps)
+    new_cache = None
+    if mode == "train":
+        a = _attn_train(p, cfg, h, window=window)
+    elif mode == "prefill":
+        a, new_cache = _attn_prefill(p, cfg, h, window=window)
+    else:
+        a, new_cache = _attn_decode(p, cfg, h, cache_l, pos, window=window)
+    x = x + a
+    h = L.rmsnorm(p, "ln_mlp", x, cfg.norm_eps)
+    aux = jnp.zeros((), F32)
+    if mlp_kind == "dense":
+        m = L.glu_mlp(p, "mlp", h, cfg.mlp_act)
+    else:
+        if mode == "decode":
+            m, aux = L.moe_ffn(p, "moe", h[:, None], cfg.moe, cfg.mlp_act)
+            m = m[:, 0]
+        else:
+            m, aux = L.moe_ffn(p, "moe", h, cfg.moe, cfg.mlp_act)
+    x = x + m
+    if x.ndim == 3:
+        x = shard(x, "batch", "act_seq", "embed")
+    else:
+        x = shard(x, "batch", "embed")
+    return x, aux, new_cache
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # "nothing": save nothing, recompute all
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed_in(params, cfg: ModelConfig, tokens):
+    x = L.embed(params, "embed", tokens).astype(cfg.activation_dtype)
+    if cfg.mlp_act == "gelu":          # gemma-family embedding scaling
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return shard(x, "batch", "seq", "embed")
+
+
+def _n_dense_first(cfg: ModelConfig) -> int:
+    return cfg.moe.first_dense_layers if cfg.moe.num_experts else 0
+
+
+def forward_train(params: Dict, cfg: ModelConfig, tokens: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """tokens [B,S] -> (logits [B,S,V], moe_aux)."""
+    x = _embed_in(params, cfg, tokens)
+    aux_total = jnp.zeros((), F32)
+    for i in range(_n_dense_first(cfg)):
+        p_i = subtree(params, f"layer{i}/")
+        body = _remat(lambda pp, xx: _block_apply(
+            pp, cfg, xx, "dense", mode="train")[:2], cfg)
+        x, aux = body(p_i, x)
+        aux_total += aux
+    mlp_kind = "moe" if cfg.moe.num_experts else "dense"
+    stacked = subtree(params, "layers/")
+
+    def body(x, p_l):
+        fn = _remat(lambda pp, xx: _block_apply(
+            pp, cfg, xx, mlp_kind, mode="train")[:2], cfg)
+        x, aux = fn(p_l, x)
+        return x, aux
+
+    x, auxes = maybe_scan(body, x, stacked, cfg.scan_layers)
+    aux_total += jnp.sum(auxes)
+    x = L.rmsnorm(params, "ln_f", x, cfg.norm_eps)
+    logits = L.logits_head(params, x,
+                           None if cfg.tie_embeddings else "head", "embed")
+    return logits, aux_total
+
+
+def loss_fn(params: Dict, cfg: ModelConfig, batch: Dict) -> Tuple[jax.Array, Dict]:
+    logits, aux = forward_train(params, cfg, batch["tokens"])
+    ce = L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+    return ce + aux, {"ce": ce, "moe_aux": aux}
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: jax.Array
+            ) -> Tuple[Dict, jax.Array]:
+    """Returns (cache, last-position logits [B,V])."""
+    x = _embed_in(params, cfg, tokens)
+    head_caches = []
+    for i in range(_n_dense_first(cfg)):
+        p_i = subtree(params, f"layer{i}/")
+        x, _, c = _block_apply(p_i, cfg, x, "dense", mode="prefill")
+        head_caches.append(c)
+    mlp_kind = "moe" if cfg.moe.num_experts else "dense"
+    stacked = subtree(params, "layers/")
+
+    def body(x, p_l):
+        x, _, c = _block_apply(p_l, cfg, x, mlp_kind, mode="prefill")
+        return x, c
+
+    x, caches = maybe_scan(body, x, stacked, cfg.scan_layers)
+    x = L.rmsnorm(params, "ln_f", x, cfg.norm_eps)
+    logits = L.logits_head(params, x[:, -1],
+                           None if cfg.tie_embeddings else "head", "embed")
+    cache: Dict[str, Any] = {f"scan/{k}": v for k, v in caches.items()}
+    for i, c in enumerate(head_caches):
+        for k, v in c.items():
+            cache[f"layer{i}/{k}"] = v
+    cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+    return cache, logits
+
+
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict,
+                tokens: jax.Array) -> Tuple[Dict, jax.Array]:
+    """tokens [B] one step; cache from prefill/cache_spec. Returns new cache."""
+    pos = cache["pos"]
+    x = L.embed(params, "embed", tokens).astype(cfg.activation_dtype)
+    if cfg.mlp_act == "gelu":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = shard(x, "batch", "embed")
+    new_cache: Dict[str, Any] = {}
+    for i in range(_n_dense_first(cfg)):
+        p_i = subtree(params, f"layer{i}/")
+        cl = {k.split("/", 1)[1]: v for k, v in cache.items()
+              if k.startswith(f"layer{i}/")}
+        x, _, c = _block_apply(p_i, cfg, x, "dense", mode="decode",
+                               cache_l=cl, pos=pos)
+        for k, v in c.items():
+            new_cache[f"layer{i}/{k}"] = v
+    mlp_kind = "moe" if cfg.moe.num_experts else "dense"
+    stacked = subtree(params, "layers/")
+    scan_cache = {k[len("scan/"):]: v for k, v in cache.items()
+                  if k.startswith("scan/")}
+
+    def body(x, xs):
+        p_l, cl = xs
+        x, _, c = _block_apply(p_l, cfg, x, mlp_kind, mode="decode",
+                               cache_l=cl, pos=pos)
+        return x, c
+
+    x, upd = maybe_scan(body, x, (stacked, scan_cache), cfg.scan_layers)
+    for k, v in upd.items():
+        new_cache[f"scan/{k}"] = v
+    x = L.rmsnorm(params, "ln_f", x, cfg.norm_eps)
+    logits = L.logits_head(params, x,
+                           None if cfg.tie_embeddings else "head", "embed")
+    new_cache["pos"] = pos + 1
+    return new_cache, logits
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (for dry-run ShapeDtypeStructs and serving allocation)
+# ---------------------------------------------------------------------------
+
+
+_KV_SCALE = 64.0  # static int8 KV grid (per-tensor; see DESIGN notes)
+
+
+def _kv_store(cfg: ModelConfig, x):
+    if cfg.kv_cache_dtype == "int8":
+        return jnp.clip(jnp.round(x.astype(jnp.float32) * _KV_SCALE),
+                        -127, 127).astype(jnp.int8)
+    return x
+
+
+def _kv_load(cfg: ModelConfig, x):
+    if cfg.kv_cache_dtype == "int8":
+        return (x.astype(jnp.bfloat16)
+                * jnp.bfloat16(1.0 / _KV_SCALE))
+    return x
+
+
+def cache_spec(cfg: ModelConfig, batch: int, smax: int) -> Dict[str, Tuple]:
+    """name -> (shape, dtype, logical axes)."""
+    dt = jnp.int8 if cfg.kv_cache_dtype == "int8" else jnp.bfloat16
+    n_first = _n_dense_first(cfg)
+    n_scan = cfg.num_layers - n_first
+    out: Dict[str, Tuple] = {}
+    if cfg.attention == "mla":
+        def entry(prefix, lead=()):
+            la = ("layers",) if lead else ()
+            out[f"{prefix}ckv"] = ((*lead, batch, smax, cfg.kv_lora_rank), dt,
+                                   (*la, "batch", "kv_seq", "kv_lora"))
+            out[f"{prefix}kpe"] = ((*lead, batch, smax, cfg.qk_rope_head_dim),
+                                   dt, (*la, "batch", "kv_seq", "qk_dim"))
+    else:
+        def entry(prefix, lead=()):
+            la = ("layers",) if lead else ()
+            shp = (*lead, batch, smax, cfg.num_kv_heads, cfg.head_dim)
+            ax = (*la, "batch", "kv_seq", "kv_heads", "head_dim")
+            out[f"{prefix}k"] = (shp, dt, ax)
+            out[f"{prefix}v"] = (shp, dt, ax)
+    for i in range(n_first):
+        entry(f"layer{i}/")
+    entry("scan/", lead=(n_scan,))
+    out["pos"] = ((), jnp.int32, ())
+    return out

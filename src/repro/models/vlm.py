@@ -1,0 +1,224 @@
+"""Llama-3.2-Vision backbone: decoder LM with gated cross-attention layers.
+
+40 layers; every 5th layer (index % 5 == 4) is a gated cross-attention layer
+attending to precomputed image patch embeddings (vision frontend is a STUB
+per the task spec).  Scanned as 8 superblocks of [4 self + 1 cross].
+Gates: x += tanh(g_attn) * xattn(...), x += tanh(g_mlp) * mlp(...), init 0.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import Registrar, maybe_scan, shard, subtree
+from repro.models.transformer import (_Prefixed, _Stacked, _gqa_qkv, _remat)
+from repro.models.encdec import cross_kv, cross_attend, _init_self_attn
+
+F32 = jnp.float32
+
+
+def _layout(cfg: ModelConfig):
+    per = cfg.cross_attn_every
+    n_super = cfg.num_layers // per
+    assert cfg.num_layers % per == 0, "vlm layer count must divide pattern"
+    return per, n_super
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(reg: Registrar, cfg: ModelConfig) -> None:
+    per, n_super = _layout(cfg)
+    L.init_embedding(reg, "embed", cfg.vocab_size, cfg.d_model)
+    stk = _Stacked(reg, n_super, "sb/")
+    for j in range(per - 1):
+        sub = _Prefixed(stk, f"self{j}/")
+        L.init_rmsnorm(sub, "ln_attn", cfg.d_model)
+        _init_self_attn(sub, cfg)
+        L.init_rmsnorm(sub, "ln_mlp", cfg.d_model)
+        L.init_glu_mlp(sub, "mlp", cfg.d_model, cfg.d_ff)
+    x = _Prefixed(stk, "cross/")
+    L.init_rmsnorm(x, "ln_x", cfg.d_model)
+    from repro.models.encdec import init_cross_attn
+    init_cross_attn(x, cfg)
+    x.param("gate_attn", (), (), init="zeros", dtype=F32)
+    L.init_rmsnorm(x, "ln_mlp", cfg.d_model)
+    L.init_glu_mlp(x, "mlp", cfg.d_model, cfg.d_ff)
+    x.param("gate_mlp", (), (), init="zeros", dtype=F32)
+    L.init_rmsnorm(reg, "ln_f", cfg.d_model)
+    if not cfg.tie_embeddings:
+        reg.param("head/w", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                  scale=cfg.d_model ** -0.5)
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+
+def _self_layer(p, cfg, x, mode, cache_l=None, pos=None):
+    new_cache = {}
+    h = L.rmsnorm(p, "ln_attn", x, cfg.norm_eps)
+    if mode in ("train", "prefill"):
+        positions = jnp.arange(x.shape[1])[None, :]
+        q, k, v = _gqa_qkv(p, cfg, h, positions)
+        o = L.attention(q, k, v, causal=True, impl=cfg.attention_impl,
+                        chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
+        if mode == "prefill":
+            new_cache["k"], new_cache["v"] = k, v
+        x = x + L.dense(p, "attn/wo", o, "...hk,hkd->...d")
+    else:
+        b = x.shape[0]
+        posv = jnp.full((b,), pos)
+        q = L.dense(p, "attn/wq", h, "...d,dhk->...hk")
+        k = L.dense(p, "attn/wk", h, "...d,dhk->...hk")
+        v = L.dense(p, "attn/wv", h, "...d,dhk->...hk")
+        q = L.rope(q, posv[:, None], cfg.rope_theta)
+        k = L.rope(k, posv[:, None], cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(cache_l["k"], k[:, None],
+                                                 pos, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache_l["v"], v[:, None],
+                                                 pos, 1)
+        o = L.decode_attention(q, kc, vc, jnp.full((b,), pos + 1))
+        x = x + L.dense(p, "attn/wo", o, "...hk,hkd->...d")
+        new_cache["k"], new_cache["v"] = kc, vc
+    h = L.rmsnorm(p, "ln_mlp", x, cfg.norm_eps)
+    x = x + L.glu_mlp(p, "mlp", h, cfg.mlp_act)
+    if x.ndim == 3:
+        x = shard(x, "batch", "act_seq", "embed")
+    return x, new_cache
+
+
+def _cross_layer(p, cfg, x, img_embeds=None, xkv=None, mode="train"):
+    new_cache = {}
+    h = L.rmsnorm(p, "ln_x", x, cfg.norm_eps)
+    if xkv is None:
+        xk, xv = cross_kv(p, cfg, img_embeds)
+        if mode == "prefill":
+            new_cache["xk"], new_cache["xv"] = xk, xv
+    else:
+        xk, xv = xkv
+    a = cross_attend(p, cfg, h, xk, xv)
+    x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * a
+    h = L.rmsnorm(p, "ln_mlp", x, cfg.norm_eps)
+    m = L.glu_mlp(p, "mlp", h, cfg.mlp_act)
+    x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * m
+    if x.ndim == 3:
+        x = shard(x, "batch", "act_seq", "embed")
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model API
+# ---------------------------------------------------------------------------
+
+
+def _superblock(p_sb, cfg, x, img_embeds, mode, cache_sb=None, pos=None):
+    per, _ = _layout(cfg)
+    caches = {}
+    for j in range(per - 1):
+        p_l = subtree(p_sb, f"self{j}/")
+        c_l = subtree(cache_sb, f"self{j}/") if cache_sb else None
+        x, c = _self_layer(p_l, cfg, x, mode, cache_l=c_l, pos=pos)
+        for ck, cv in c.items():
+            caches[f"self{j}/{ck}"] = cv
+    p_x = subtree(p_sb, "cross/")
+    if mode == "decode":
+        c_x = subtree(cache_sb, "cross/")
+        x, c = _cross_layer(p_x, cfg, x, xkv=(c_x["xk"], c_x["xv"]),
+                            mode=mode)
+        caches["cross/xk"], caches["cross/xv"] = c_x["xk"], c_x["xv"]
+    else:
+        x, c = _cross_layer(p_x, cfg, x, img_embeds=img_embeds, mode=mode)
+        for ck, cv in c.items():
+            caches[f"cross/{ck}"] = cv
+    return x, caches
+
+
+def forward_train(params, cfg: ModelConfig, tokens, image_embeds):
+    img = shard(image_embeds.astype(cfg.activation_dtype),
+                "batch", "img_seq", "embed")
+    x = L.embed(params, "embed", tokens).astype(cfg.activation_dtype)
+    x = shard(x, "batch", "seq", "embed")
+    stacked = subtree(params, "sb/")
+
+    def body(x, p_sb):
+        fn = _remat(lambda pp, xx: _superblock(pp, cfg, xx, img, "train")[0],
+                    cfg)
+        return fn(p_sb, x), None
+
+    x, _ = maybe_scan(body, x, stacked, cfg.scan_layers)
+    x = L.rmsnorm(params, "ln_f", x, cfg.norm_eps)
+    logits = L.logits_head(params, x,
+                           None if cfg.tie_embeddings else "head", "embed")
+    return logits, jnp.zeros((), F32)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    logits, _ = forward_train(params, cfg, batch["tokens"],
+                              batch["image_embeds"])
+    ce = L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+    return ce, {"ce": ce}
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    img = batch["image_embeds"].astype(cfg.activation_dtype)
+    x = L.embed(params, "embed", batch["tokens"]).astype(cfg.activation_dtype)
+    stacked = subtree(params, "sb/")
+
+    def body(x, p_sb):
+        x, c = _superblock(p_sb, cfg, x, img, "prefill")
+        return x, c
+
+    x, caches = maybe_scan(body, x, stacked, cfg.scan_layers)
+    x = L.rmsnorm(params, "ln_f", x, cfg.norm_eps)
+    logits = L.logits_head(params, x[:, -1],
+                           None if cfg.tie_embeddings else "head", "embed")
+    cache = {f"sb/{k}": v for k, v in caches.items()}
+    cache["pos"] = jnp.asarray(batch["tokens"].shape[1], jnp.int32)
+    return cache, logits
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    pos = cache["pos"]
+    x = L.embed(params, "embed", tokens).astype(cfg.activation_dtype)
+    stacked = subtree(params, "sb/")
+    sc = subtree(cache, "sb/")
+
+    def body(x, xs):
+        p_sb, c_sb = xs
+        x, c = _superblock(p_sb, cfg, x, None, "decode", cache_sb=c_sb,
+                           pos=pos)
+        return x, c
+
+    x, upd = maybe_scan(body, x, (stacked, sc), cfg.scan_layers)
+    x = L.rmsnorm(params, "ln_f", x, cfg.norm_eps)
+    logits = L.logits_head(params, x,
+                           None if cfg.tie_embeddings else "head", "embed")
+    new_cache = {f"sb/{k}": v for k, v in upd.items()}
+    new_cache["pos"] = pos + 1
+    return new_cache, logits
+
+
+def cache_spec(cfg: ModelConfig, batch: int, smax: int) -> Dict[str, Tuple]:
+    per, n_super = _layout(cfg)
+    dt = jnp.bfloat16
+    ax = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    out: Dict[str, Tuple] = {}
+    for j in range(per - 1):
+        shp = (n_super, batch, smax, cfg.num_kv_heads, cfg.head_dim)
+        out[f"sb/self{j}/k"] = (shp, dt, ax)
+        out[f"sb/self{j}/v"] = (shp, dt, ax)
+    xshp = (n_super, batch, cfg.num_image_tokens, cfg.num_kv_heads,
+            cfg.head_dim)
+    out["sb/cross/xk"] = (xshp, dt, ax)
+    out["sb/cross/xv"] = (xshp, dt, ax)
+    out["pos"] = ((), jnp.int32, ())
+    return out

@@ -1,0 +1,84 @@
+"""LM serving engine: prefill/decode with KV cache + FENIX admission gate.
+
+Static-batch decode loop over the uniform Model API (works for every
+assigned arch): allocate the cache at prefill_len + max_new, run
+``decode_step`` repeatedly, optionally with int8 weights (Model Engine
+quantization) and the ServeGate admitting requests at the measured decode
+throughput — the full FENIX pattern applied to LM inference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.gate import GateConfig, ServeGate
+from repro.models import api
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    greedy: bool = True
+    quant: str = "none"          # "none" | "int8"
+    gate_backend_rate: Optional[float] = None  # req/s; None = ungated
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Dict[str, Any],
+                 scfg: ServeConfig):
+        self.cfg = cfg
+        self.scfg = scfg
+        if scfg.quant == "int8":
+            # FENIX Model Engine INT8 applied to the LM weights
+            _, axes = api.init_params(cfg, abstract=True)
+            params, _ = api.quantize_for_serving(cfg, params, axes)
+        self.params = params
+        self._decode = jax.jit(
+            lambda p, c, t: api.decode_step(p, cfg, c, t))
+        self.gate: Optional[ServeGate] = None
+        if scfg.gate_backend_rate:
+            self.gate = ServeGate(GateConfig(
+                backend_rate=scfg.gate_backend_rate))
+
+    def generate(self, batch: Dict[str, Any]) -> Dict[str, Any]:
+        """batch: tokens [B,S] (+ src_embeds/image_embeds). Greedy decode."""
+        cfg, scfg = self.cfg, self.scfg
+        b, s = batch["tokens"].shape
+        cache, logits = api.prefill(self.params, cfg, batch)
+        cache = api.grow_cache(cfg, cache, b, s, s + scfg.max_new_tokens,
+                               src_len=batch.get("src_embeds",
+                                                 batch["tokens"]).shape[1])
+        toks = [jnp.argmax(logits, -1).astype(jnp.int32)]
+        t0 = time.time()
+        for _ in range(scfg.max_new_tokens - 1):
+            cache, logits = self._decode(self.params, cache, toks[-1])
+            toks.append(jnp.argmax(logits, -1).astype(jnp.int32))
+        dt = time.time() - t0
+        out = jnp.stack(toks, axis=1)
+        return {"tokens": out,
+                "decode_tok_per_s": (scfg.max_new_tokens - 1) * b
+                / max(dt, 1e-9)}
+
+    def serve_requests(self, arrivals: List[Dict[str, Any]]
+                       ) -> Dict[str, Any]:
+        """Gated request admission: each arrival {stream, t_us, batch}."""
+        admitted, denied = [], 0
+        for req in arrivals:
+            if self.gate is None or self.gate.offer(req["stream"],
+                                                    req["t_us"]):
+                admitted.append(req)
+            else:
+                denied += 1
+        results = [self.generate(r["batch"]) for r in admitted]
+        return {"admitted": len(admitted), "denied": denied,
+                "results": results,
+                "gate_stats": None if self.gate is None else
+                {"admitted": self.gate.admitted,
+                 "denied": self.gate.denied}}

@@ -1,0 +1,105 @@
+"""Hand-rolled AdamW + schedules on flat param dicts (no optax offline).
+
+States are fp32 regardless of param dtype (bf16 training with fp32 moments —
+the standard large-model recipe).  Opt-state pytrees mirror the param tree so
+the same PartitionSpecs shard them (m/v inherit the param's spec).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # "cosine" | "constant"
+
+
+def schedule_lr(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(F32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def init_state(params: Dict[str, Any]) -> Dict[str, Any]:
+    zeros = {k: jnp.zeros(v.shape, F32) for k, v in params.items()}
+    return {"m": zeros,
+            "v": {k: jnp.zeros(v.shape, F32) for k, v in params.items()},
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_state(params: Dict[str, Any]) -> Dict[str, Any]:
+    zeros = {k: jax.ShapeDtypeStruct(v.shape, F32) for k, v in params.items()}
+    return {"m": zeros,
+            "v": {k: jax.ShapeDtypeStruct(v.shape, F32)
+                  for k, v in params.items()},
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def global_norm(tree: Dict[str, Any]) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(v.astype(F32))) for v in tree.values())
+    return jnp.sqrt(sq)
+
+
+def apply_updates(params: Dict[str, Any], grads: Dict[str, Any],
+                  state: Dict[str, Any], cfg: OptConfig
+                  ) -> Tuple[Dict[str, Any], Dict[str, Any], Dict[str, Any]]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule_lr(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.asarray(1.0, F32)
+    b1c = 1.0 - cfg.b1 ** step.astype(F32)
+    b2c = 1.0 - cfg.b2 ** step.astype(F32)
+    new_p, new_m, new_v = {}, {}, {}
+    for k, p in params.items():
+        g = grads[k].astype(F32) * clip
+        m = cfg.b1 * state["m"][k] + (1 - cfg.b1) * g
+        v = cfg.b2 * state["v"][k] + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        upd = mh / (jnp.sqrt(vh) + cfg.eps)
+        # decoupled weight decay: skip 1-d params (norms, biases)
+        if cfg.weight_decay > 0 and p.ndim >= 2:
+            upd = upd + cfg.weight_decay * p.astype(F32)
+        new_p[k] = (p.astype(F32) - lr * upd).astype(p.dtype)
+        new_m[k] = m
+        new_v[k] = v
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: OptConfig) -> Callable:
+    """loss_fn(params, batch) -> (loss, metrics). Returns jittable step."""
+
+    def train_step(params, state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, state, opt_metrics = apply_updates(params, grads, state,
+                                                   opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, state, metrics
+
+    return train_step

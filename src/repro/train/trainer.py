@@ -1,0 +1,151 @@
+"""Generic fault-tolerant training loop.
+
+Used by the FENIX traffic classifiers (examples/, benchmarks/) and the
+reduced LM configs; the same step function lowers unchanged onto the
+production mesh (launch/train.py).  Features:
+
+  - AdamW + cosine schedule (train/optimizer.py)
+  - checkpoint/restart: atomic sharded npz, auto-resume from latest
+  - failure handling: NaN/inf loss detection -> restore last checkpoint and
+    skip the offending batch (the driver-level analogue of replica restart)
+  - straggler mitigation hook: per-step wall-time EMA; steps slower than
+    ``straggler_factor`` x EMA are logged and counted (on real fleets this
+    signal feeds the re-balancer in distributed/elastic.py)
+  - optional int8 gradient compression with error feedback
+    (distributed/compression.py) before the optimizer update
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train import checkpoint as ckpt_lib
+from repro.train.optimizer import OptConfig, apply_updates, init_state
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 500
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    keep: int = 3
+    log_every: int = 50
+    straggler_factor: float = 3.0
+    grad_compression: bool = False
+    opt: OptConfig = dataclasses.field(default_factory=OptConfig)
+
+
+class Trainer:
+    def __init__(self, loss_fn: Callable, params: Dict[str, Any],
+                 cfg: TrainerConfig):
+        self.cfg = cfg
+        self.params = params
+        self.opt_state = init_state(params)
+        self.step = 0
+        self.loss_fn = loss_fn
+        self.metrics_log: list = []
+        self.straggler_steps = 0
+        self.recoveries = 0
+        if cfg.grad_compression:
+            from repro.distributed.compression import CompressedState
+            self.comp_state = CompressedState.init(params)
+        else:
+            self.comp_state = None
+        self._build_step()
+        if cfg.ckpt_dir:
+            restored = ckpt_lib.restore_latest(cfg.ckpt_dir)
+            if restored is not None:
+                state, meta = restored
+                self.params = state["params"]
+                self.opt_state = state["opt"]
+                self.step = int(meta["step"])
+
+    def _build_step(self):
+        ocfg = self.cfg.opt
+        lfn = self.loss_fn
+        compress = self.cfg.grad_compression
+
+        def train_step(params, opt_state, comp_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lfn, has_aux=True)(params, batch)
+            if compress:
+                from repro.distributed.compression import (
+                    compress_decompress)
+                grads, comp_state = compress_decompress(grads, comp_state)
+            params, opt_state, om = apply_updates(params, grads, opt_state,
+                                                  ocfg)
+            metrics = dict(metrics)
+            metrics.update(om)
+            metrics["loss"] = loss
+            return params, opt_state, comp_state, metrics
+
+        self._step_fn = jax.jit(train_step, donate_argnums=(0, 1, 2))
+
+    def run(self, batches: Iterator[Dict[str, Any]],
+            steps: Optional[int] = None) -> Dict[str, Any]:
+        cfg = self.cfg
+        target = self.step + (steps or cfg.total_steps)
+        ema = None
+        last_metrics: Dict[str, Any] = {}
+        while self.step < target:
+            batch = next(batches)
+            t0 = time.time()
+            params, opt, comp, metrics = self._step_fn(
+                self.params, self.opt_state, self.comp_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            if not np.isfinite(loss):
+                # failure path: restore last good state, skip batch
+                self.recoveries += 1
+                if cfg.ckpt_dir:
+                    restored = ckpt_lib.restore_latest(cfg.ckpt_dir)
+                    if restored is not None:
+                        state, meta = restored
+                        self.params = state["params"]
+                        self.opt_state = state["opt"]
+                        self.step = int(meta["step"])
+                        self._build_step()  # donated buffers were consumed
+                        continue
+                # no checkpoint yet: just skip the batch
+                self._build_step()
+                continue
+            self.params, self.opt_state, self.comp_state = params, opt, comp
+            self.step += 1
+            last_metrics = {k: float(v) for k, v in metrics.items()}
+            if ema is None:
+                ema = dt
+            elif dt > cfg.straggler_factor * ema:
+                self.straggler_steps += 1
+                ema = 0.9 * ema + 0.1 * dt
+            else:
+                ema = 0.9 * ema + 0.1 * dt
+            if self.step % cfg.log_every == 0:
+                self.metrics_log.append({"step": self.step, **last_metrics})
+            if cfg.ckpt_dir and self.step % cfg.ckpt_every == 0:
+                ckpt_lib.save(cfg.ckpt_dir, self.step,
+                              {"params": self.params, "opt": self.opt_state},
+                              keep=cfg.keep)
+        if cfg.ckpt_dir:
+            ckpt_lib.save(cfg.ckpt_dir, self.step,
+                          {"params": self.params, "opt": self.opt_state},
+                          keep=cfg.keep)
+        return last_metrics
+
+
+def batch_iterator(x: np.ndarray, y: np.ndarray, batch: int, seed: int = 0,
+                   weights: Optional[np.ndarray] = None
+                   ) -> Iterator[Dict[str, Any]]:
+    rng = np.random.default_rng(seed)
+    n = len(y)
+    while True:
+        idx = rng.integers(0, n, batch)
+        b = {"payload": jnp.asarray(x[idx]), "label": jnp.asarray(y[idx])}
+        if weights is not None:
+            b["weight"] = jnp.asarray(weights[idx], jnp.float32)
+        yield b

@@ -1,0 +1,95 @@
+"""Baseline schemes train and beat chance on the synthetic ISCX task."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines import bos as bos_lib
+from repro.baselines import n3ic as n3ic_lib
+from repro.baselines.common import macro_f1
+from repro.baselines.flowlens import FlowLensModel, markers
+from repro.baselines.leo import LeoModel
+from repro.baselines.netbeacon import NetBeaconModel
+from repro.configs.fenix_models import fenix_cnn
+from repro.data.synthetic_traffic import make_flows, windows_from_flows
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig, batch_iterator
+
+K = 7
+CHANCE = 1.0 / K
+
+
+@pytest.fixture(scope="module")
+def data():
+    tr = make_flows("iscx", 250, seed=10, min_per_class=10)
+    te = make_flows("iscx", 100, seed=11, min_per_class=5)
+    return tr, te
+
+
+def test_leo(data):
+    tr, te = data
+    m = LeoModel(K)
+    m.fit(tr)
+    r = m.predict_packets(te)
+    f1 = macro_f1(r["label"], r["pred"], K)
+    assert f1 > CHANCE * 1.5, f1
+
+
+def test_netbeacon(data):
+    tr, te = data
+    m = NetBeaconModel(K)
+    m.fit(tr)
+    r = m.predict_packets(te)
+    f1 = macro_f1(r["label"], r["pred"], K)
+    assert f1 > CHANCE * 1.5, f1
+
+
+def test_flowlens(data):
+    tr, te = data
+    x, y = markers(tr)
+    xe, ye = markers(te)
+    m = FlowLensModel(K, rounds=10)
+    m.fit(x, y)
+    f1 = macro_f1(ye, m.predict(xe), K)
+    assert f1 > CHANCE * 2, f1
+
+
+def test_bos(data):
+    tr, te = data
+    xtr, ytr, _ = windows_from_flows(tr)
+    xte, yte, _ = windows_from_flows(te)
+    cfg = fenix_cnn(K)
+    params = bos_lib.init(cfg, 0)
+    t = Trainer(lambda p, b: bos_lib.loss_fn(p, cfg, b), params,
+                TrainerConfig(total_steps=120, log_every=10**9,
+                              opt=OptConfig(lr=3e-3, warmup_steps=12,
+                                            total_steps=120)))
+    t.run(batch_iterator(xtr, ytr, 128))
+    pred = np.argmax(np.asarray(
+        bos_lib.apply(t.params, cfg, jnp.asarray(xte))), -1)
+    f1 = macro_f1(yte, pred, K)
+    assert f1 > CHANCE * 1.5, f1
+
+
+def test_n3ic(data):
+    tr, te = data
+    x, y, _ = n3ic_lib.build_features(tr)
+    xe, ye, _ = n3ic_lib.build_features(te)
+    params = n3ic_lib.init(x.shape[1], K, 0)
+
+    def batches():
+        rng = np.random.default_rng(0)
+        while True:
+            idx = rng.integers(0, len(y), 128)
+            yield {"payload": jnp.asarray(x[idx]),
+                   "label": jnp.asarray(y[idx])}
+
+    t = Trainer(lambda p, b: n3ic_lib.loss_fn(p, b), params,
+                TrainerConfig(total_steps=120, log_every=10**9,
+                              opt=OptConfig(lr=3e-3, warmup_steps=12,
+                                            total_steps=120)))
+    t.run(batches())
+    pred = np.argmax(np.asarray(n3ic_lib.apply(t.params,
+                                               jnp.asarray(xe))), -1)
+    f1 = macro_f1(ye, pred, K)
+    assert f1 > CHANCE * 1.5, f1

@@ -1,0 +1,70 @@
+"""Registry + analytic parameter counts for the assigned architectures."""
+
+import pytest
+
+from repro.configs import REGISTRY, SHAPES, get_config, list_archs, \
+    shape_applicable
+from repro.models.api import analytic_param_count, model_flops
+
+EXPECTED_ARCHS = {
+    "deepseek-v2-236b", "qwen2-moe-a2.7b", "llama3.2-1b", "qwen2.5-14b",
+    "qwen3-4b", "gemma-7b", "mamba2-370m", "recurrentgemma-9b",
+    "seamless-m4t-medium", "llama-3.2-vision-11b",
+}
+
+# loose published total-parameter envelopes (matmul params, see api.py)
+PARAM_ENVELOPES = {
+    "deepseek-v2-236b": (180e9, 260e9),
+    "qwen2-moe-a2.7b": (8e9, 16e9),       # 14.3B total / 2.7B active
+    "llama3.2-1b": (0.8e9, 1.6e9),
+    "qwen2.5-14b": (11e9, 16e9),
+    "qwen3-4b": (3e9, 5e9),
+    "gemma-7b": (7e9, 10e9),
+    "mamba2-370m": (0.25e9, 0.5e9),
+    "recurrentgemma-9b": (7e9, 11e9),
+    "seamless-m4t-medium": (0.3e9, 1.2e9),
+    "llama-3.2-vision-11b": (8e9, 12e9),
+}
+
+
+def test_all_archs_registered():
+    assert set(list_archs()) == EXPECTED_ARCHS
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_ARCHS))
+def test_param_counts(arch):
+    cfg = get_config(arch)
+    n = analytic_param_count(cfg)
+    lo, hi = PARAM_ENVELOPES[arch]
+    assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+
+
+def test_active_params_moe():
+    ds = get_config("deepseek-v2-236b")
+    total = analytic_param_count(ds)
+    active = analytic_param_count(ds, active_only=True)
+    # deepseek-v2: 236B total / 21B active
+    assert active < total / 5
+    assert 12e9 <= active <= 30e9
+
+
+def test_long_context_applicability():
+    for arch in EXPECTED_ARCHS:
+        cfg = get_config(arch)
+        ok, reason = shape_applicable(cfg, SHAPES["long_500k"])
+        expect = arch in ("mamba2-370m", "recurrentgemma-9b")
+        assert ok == expect, (arch, reason)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_ARCHS))
+def test_model_flops_positive(arch):
+    cfg = get_config(arch)
+    for shape in SHAPES.values():
+        if shape_applicable(cfg, shape)[0]:
+            assert model_flops(cfg, shape) > 0
+
+
+def test_reduced_configs_small():
+    for arch in EXPECTED_ARCHS:
+        cfg = get_config(arch, reduced=True)
+        assert analytic_param_count(cfg) < 5e6, arch

@@ -1,0 +1,124 @@
+"""FENIX system behaviour: quantization fidelity, Vector I/O ordering,
+end-to-end co-simulation accuracy, serve gate fairness."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.fenix_models import fenix_cnn, fenix_rnn
+from repro.core.gate import GateConfig, ServeGate
+from repro.core.model_engine import vector_io as vio
+from repro.data.synthetic_traffic import (make_flows, packet_stream,
+                                          windows_from_flows)
+from repro.models import traffic
+from repro.quant.quantize import int8_apply, quantize_traffic
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig, batch_iterator
+
+
+@pytest.fixture(scope="module")
+def trained_cnn():
+    flows = make_flows("iscx", 150, seed=5)
+    x, y, f = windows_from_flows(flows)
+    cfg = fenix_cnn(7)
+    params = traffic.init(cfg, 0)
+    t = Trainer(lambda p, b: traffic.loss_fn(p, cfg, b), params,
+                TrainerConfig(total_steps=150, log_every=10**9,
+                              opt=OptConfig(lr=3e-3, warmup_steps=15,
+                                            total_steps=150)))
+    t.run(batch_iterator(x, y, 256))
+    return cfg, t.params, (flows, x, y, f)
+
+
+def test_int8_quantization_fidelity(trained_cnn):
+    """Paper §6: quantization gives 'only negligible degradation'."""
+    cfg, params, (flows, x, y, f) = trained_cnn
+    qp = quantize_traffic(params, cfg, jnp.asarray(x[:256]))
+    fl = np.argmax(np.asarray(traffic.apply(params, cfg,
+                                            jnp.asarray(x[:800]))), -1)
+    q8 = np.argmax(np.asarray(int8_apply(qp, cfg, jnp.asarray(x[:800]))), -1)
+    agree = float(np.mean(fl == q8))
+    assert agree > 0.95, agree
+
+
+def test_rnn_quantization_runs():
+    flows = make_flows("iscx", 60, seed=6)
+    x, y, f = windows_from_flows(flows)
+    cfg = fenix_rnn(7)
+    params = traffic.init(cfg, 0)
+    qp = quantize_traffic(params, cfg, jnp.asarray(x[:128]))
+    out = int8_apply(qp, cfg, jnp.asarray(x[:64]))
+    assert out.shape == (64, 7)
+
+
+def test_vector_io_fifo_ordering():
+    """§5.1 invariant: results pair with ids in FIFO order."""
+    cfg = vio.IOConfig(queue_len=16)
+    q = vio.init_queues(cfg)
+    slots = np.arange(10, dtype=np.int32)
+    hashes = (slots + 100).astype(np.uint32)
+    feats = np.zeros((10, cfg.feat_len, cfg.feat_dim), np.int32)
+    feats[:, 0, 0] = slots
+    q = vio.enqueue_batch(q, cfg, slots, hashes, feats)
+    q, s1, h1, f1 = vio.dequeue_batch(q, cfg, 4)
+    assert list(s1) == [0, 1, 2, 3]
+    q, s2, h2, f2 = vio.dequeue_batch(q, cfg, 100)
+    assert list(s2) == [4, 5, 6, 7, 8, 9]
+    assert vio.occupancy(q) == 0
+
+
+def test_vector_io_overflow_drops():
+    cfg = vio.IOConfig(queue_len=4)
+    q = vio.init_queues(cfg)
+    slots = np.arange(8, dtype=np.int32)
+    q = vio.enqueue_batch(q, cfg, slots, slots.astype(np.uint32),
+                          np.zeros((8, cfg.feat_len, cfg.feat_dim),
+                                   np.int32))
+    assert int(q["dropped"]) == 4
+    assert vio.occupancy(q) == 4
+
+
+def test_end_to_end_cosim_accuracy(trained_cnn):
+    """Packets -> switch -> rate limiter -> INT8 DNN -> flow verdicts."""
+    from repro.core.fenix import FenixConfig, FenixSystem
+    from repro.core.model_engine.inference import EngineModel
+    from repro.core.data_engine.decision_tree import fit_tree, tree_arrays
+
+    cfg, params, (flows, x, y, f) = trained_cnn
+    qp = quantize_traffic(params, cfg, jnp.asarray(x[:256]))
+    model = EngineModel(cfg, qp)
+    tree = tree_arrays(fit_tree(x[:, -1, :], y, depth=4, num_classes=7))
+    stream = packet_stream(flows, limit=6000)
+    oracle = [np.stack([fl.pkt_len, fl.ipd_us], -1).astype(np.int32)
+              for fl in flows]
+    sys_ = FenixSystem(FenixConfig(), model, tree=tree,
+                       oracle_windows=oracle)
+    out = sys_.run_trace(stream)
+    v, lab = out["verdict"], stream["label"]
+    mask = v >= 0
+    assert mask.mean() > 0.9
+    acc = float(np.mean(v[mask] == lab[mask]))
+    assert acc > 0.75, acc
+    assert sys_.stats["granted"] > 0
+    assert sys_.stats["inferences"] > 0
+
+
+def test_serve_gate_fairness():
+    """Fast streams must not starve slow streams (Appendix A transferred)."""
+    cfg = GateConfig(backend_rate=1000.0)
+    gate = ServeGate(cfg, seed=0)
+    rng = np.random.default_rng(0)
+    admitted = {0: 0, 1: 0}
+    t = 0
+    # stream 0: 10x the request rate of stream 1
+    for i in range(30000):
+        t += int(rng.exponential(100))
+        sid = 0 if rng.random() < 10 / 11 else 1
+        if gate.offer(sid, t):
+            admitted[sid] += 1
+        if i % 5000 == 4999:
+            gate.refresh()
+    assert admitted[0] > 0 and admitted[1] > 0
+    ratio = admitted[0] / max(admitted[1], 1)
+    # rate-proportional would be 10:1; the gate pulls toward parity (<5:1)
+    assert ratio < 6.0, ratio

@@ -1,0 +1,136 @@
+"""Pallas kernels (interpret=True) vs pure-jnp oracles: shape/dtype sweeps
++ hypothesis property sweeps, per the task requirements."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.probability import LUTConfig, build_lut
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.int8_matmul.ops import int8_conv1d, int8_matmul
+from repro.kernels.int8_matmul.ref import int8_matmul_ref
+from repro.kernels.rate_gate.ops import rate_gate
+from repro.kernels.rate_gate.ref import rate_gate_ref
+
+
+# ---------------------------------------------------------------------------
+# int8 systolic GEMM
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 128), (64, 200, 130), (1, 384, 256), (300, 96, 70),
+    (8, 8, 8), (129, 129, 129),
+])
+@pytest.mark.parametrize("shift", [None, 4, 9])
+def test_int8_matmul_sweep(m, k, n, shift):
+    rng = np.random.default_rng(m * 1000 + n)
+    a = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+    bias = jnp.asarray(rng.integers(-500, 500, (n,)), jnp.int32)
+    ref = int8_matmul_ref(a, b, bias, shift)
+    pal = int8_matmul(a, b, bias, shift, backend="pallas")
+    assert ref.dtype == pal.dtype
+    assert bool(jnp.all(ref == pal))
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 64), k=st.integers(1, 64), n=st.integers(1, 64),
+       seed=st.integers(0, 1000))
+def test_int8_matmul_property(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+    assert bool(jnp.all(int8_matmul_ref(a, b)
+                        == int8_matmul(a, b, backend="pallas")))
+
+
+def test_int8_conv1d_matches_float():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-64, 64, (2, 9, 8)), jnp.int8)
+    w = jnp.asarray(rng.integers(-64, 64, (3, 8, 16)), jnp.int8)
+    got = int8_conv1d(x, w, None, None, backend="pallas")
+    # float 'same' conv oracle
+    xf = np.asarray(x, np.int64)
+    wf = np.asarray(w, np.int64)
+    pad = 1
+    xp = np.pad(xf, ((0, 0), (pad, 1), (0, 0)))
+    want = np.zeros((2, 9, 16), np.int64)
+    for t in range(9):
+        for j in range(3):
+            want[:, t] += xp[:, t + j] @ wf[j]
+    assert np.array_equal(np.asarray(got, np.int64), want)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,hq,hkv,d,s,ck", [
+    (2, 8, 2, 64, 256, 128), (1, 4, 1, 128, 512, 256),
+    (3, 16, 8, 32, 128, 64), (2, 8, 8, 64, 320, 64),
+])
+def test_decode_attention_sweep(b, hq, hkv, d, s, ck):
+    rng = np.random.default_rng(b * 10 + s)
+    q = jnp.asarray(rng.normal(0, 1, (b, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, hkv, d)), jnp.float32)
+    lens = jnp.asarray(rng.integers(1, s + 1, (b,)), jnp.int32)
+    ref = decode_attention_ref(q, k, v, lens)
+    pal = decode_attention_pallas(q, k, v, lens, ck=ck)
+    assert float(jnp.max(jnp.abs(ref - pal))) < 1e-5
+
+
+def test_decode_attention_bf16():
+    rng = np.random.default_rng(0)
+    b, hq, hkv, d, s = 2, 4, 2, 32, 128
+    q = jnp.asarray(rng.normal(0, 1, (b, hq, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, hkv, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, hkv, d)), jnp.bfloat16)
+    lens = jnp.full((b,), s, jnp.int32)
+    ref = decode_attention_ref(q, k, v, lens).astype(jnp.float32)
+    pal = decode_attention_pallas(q, k, v, lens, ck=64).astype(jnp.float32)
+    assert float(jnp.max(jnp.abs(ref - pal))) < 3e-2
+
+
+# ---------------------------------------------------------------------------
+# rate gate
+# ---------------------------------------------------------------------------
+
+
+def test_rate_gate_bit_exact():
+    lcfg = LUTConfig()
+    lut = jnp.asarray(build_lut(n=500, q=0.5, v=0.05, cfg=lcfg))
+    rng = np.random.default_rng(0)
+    n = 1000
+    t = jnp.asarray(rng.integers(0, 1 << 16, n), jnp.int32)
+    c = jnp.asarray(rng.integers(0, 64, n), jnp.int32)
+    r16 = jnp.asarray(rng.integers(0, 1 << 16, n), jnp.int32)
+    a = rate_gate(t, c, lut, rand16=r16, backend="pallas")
+    b = rate_gate_ref(t, c, lut, r16, lcfg.t_shift, lcfg.c_shift)
+    assert bool(jnp.all(a == b))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_flows=st.integers(10, 2000), v_scale=st.floats(0.01, 0.2),
+       seed=st.integers(0, 100))
+def test_rate_gate_rate_property(n_flows, v_scale, seed):
+    """Selection frequency matches the LUT expectation (+-5%)."""
+    lcfg = LUTConfig()
+    lut_np = build_lut(n=float(n_flows), q=1.0, v=v_scale, cfg=lcfg)
+    lut = jnp.asarray(lut_np)
+    rng = np.random.default_rng(seed)
+    n = 4096
+    t = rng.integers(0, 1 << 16, n).astype(np.int32)
+    c = rng.integers(0, 32, n).astype(np.int32)
+    r16 = jnp.asarray(rng.integers(0, 1 << 16, n), jnp.int32)
+    sel = rate_gate(jnp.asarray(t), jnp.asarray(c), lut, rand16=r16,
+                    backend="pallas")
+    ti = np.clip(t >> lcfg.t_shift, 0, lcfg.t_bins - 1)
+    ci = np.clip(c >> lcfg.c_shift, 0, lcfg.c_bins - 1)
+    expect = lut_np[ti, ci].sum() / float(1 << 16) / n
+    got = float(np.mean(np.asarray(sel)))
+    assert abs(got - expect) < 0.05

@@ -1,0 +1,108 @@
+"""Eq. 2 probability model + Appendix A fairness (property tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.probability import (LUTConfig, build_lut, expected_period,
+                                    lut_lookup_np, mean_period_over_flows,
+                                    probability, token_rate)
+
+
+def test_token_rate_eq1():
+    # V = min(F, B/W)
+    assert token_rate(75e6, 12.5e9, 64) == 75e6
+    assert token_rate(75e6, 12.5e9, 1000) == 12.5e6
+
+
+@settings(max_examples=50, deadline=None)
+@given(t=st.floats(1, 1e7), c=st.floats(1, 1e5), n=st.floats(1, 1e4),
+       q=st.floats(0.01, 100.0), v=st.floats(1e-4, 1.0))
+def test_probability_in_unit_interval(t, c, n, q, v):
+    p = probability(np.asarray([t]), np.asarray([c]), n, q, v)[0]
+    assert 0.0 <= p <= 1.0
+
+
+def test_probability_monotone_in_t():
+    """For a fixed-rate flow, waiting longer never lowers the probability."""
+    n, q, v = 1000.0, 1.0, 0.075
+    for qi in (0.001, 0.01, 0.1, 1.0):
+        ts = np.linspace(1, 1e6, 500)
+        cs = qi * ts
+        ps = probability(ts, cs, n, q, v)
+        assert np.all(np.diff(ps) >= -1e-9)
+
+
+def test_boundaries_match_criteria():
+    """P=0 below both criterion points, P=1 above both."""
+    n, q, v = 1000.0, 1.0, 0.075
+    qi = 0.01                      # slow flow
+    lo = min(n / v, q / (qi * v))
+    hi = max(n / v, q / (qi * v))
+    t = np.asarray([lo * 0.5, hi * 1.5])
+    c = qi * t
+    p = probability(t, c, n, q, v)
+    assert p[0] == 0.0 and p[1] == 1.0
+
+
+def test_expected_period_formula():
+    # Appendix A Eq. 6
+    n, q, v = 1000.0, 1.0, 0.075
+    qi = 0.05
+    e = expected_period(qi, n, q, v)
+    assert np.isclose(e, (qi * n + q) / (2 * qi * v))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), n_flows=st.integers(5, 200))
+def test_fairness_appendix_a(seed, n_flows):
+    """Rate-weighted mean period == N/V for ANY rate distribution."""
+    rng = np.random.default_rng(seed)
+    rates = rng.lognormal(0, 1.5, n_flows) + 1e-3
+    q = rates.sum()
+    v = q / 10.0
+    mean = mean_period_over_flows(rates, n=n_flows, q=q, v=v)
+    assert np.isclose(mean, n_flows / v, rtol=1e-9)
+
+
+def test_fairness_empirical_simulation():
+    """Monte-carlo of the sampling process: measured E[interval] ~= N/V.
+
+    Simulates heterogeneous Poisson-ish flows sampled by Eq.2 probabilities
+    and checks the paper's fairness claim empirically, not just the algebra.
+    """
+    rng = np.random.default_rng(0)
+    n_flows, v = 50, 0.02               # tokens per us
+    rates = np.concatenate([np.full(25, 0.001), np.full(25, 0.019)])
+    q = rates.sum()                     # ~0.5 pkt/us
+    horizon = 4_000_000
+    intervals = []
+    for fi, qi in enumerate(rates):
+        t_last = 0.0
+        c = 0
+        t = 0.0
+        while t < horizon:
+            t += rng.exponential(1.0 / qi)
+            c += 1
+            p = probability(np.asarray([t - t_last]), np.asarray([c]),
+                            n_flows, q, v)[0]
+            if rng.random() < p:
+                intervals.append(t - t_last)
+                t_last = t
+                c = 0
+    measured = np.mean(intervals)
+    expect = n_flows / v
+    assert abs(measured - expect) / expect < 0.15, (measured, expect)
+
+
+def test_lut_approximates_probability():
+    cfg = LUTConfig()
+    n, q, v = 1000.0, 1.0, 0.075
+    lut = build_lut(n, q, v, cfg)
+    rng = np.random.default_rng(0)
+    t = rng.integers(1, 1 << 16, 500)
+    c = rng.integers(1, 32, 500)
+    p_lut = lut_lookup_np(lut, t, c, cfg) / float((1 << cfg.prob_bits) - 1)
+    p_true = probability(t, c, n, q, v)
+    # bin-center quantization error bound
+    assert np.mean(np.abs(p_lut - p_true)) < 0.08

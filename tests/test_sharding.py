@@ -1,0 +1,77 @@
+"""Sharding rules, divisibility fallbacks, pspec generation (AbstractMesh —
+no devices needed; the compile-level proof is launch/dryrun.py)."""
+
+import jax
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.models import api
+from repro.models.param import (DEFAULT_RULES, sharding_ctx, spec_for,
+                                tree_pspecs)
+
+MESH1 = AbstractMesh((16, 16), ("data", "model"))
+MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_spec_divisibility_fallback():
+    with sharding_ctx(MESH1):
+        # 40 heads not divisible by model=16 -> replicated
+        spec = spec_for((5120, 40, 128), ("embed", "heads", "head_dim"))
+        assert spec == P("data", None, None)
+        # divisible heads shard
+        spec = spec_for((5120, 32, 128), ("embed", "heads", "head_dim"))
+        assert spec == P("data", "model", None)
+
+
+def test_spec_axis_used_once():
+    with sharding_ctx(MESH2):
+        # batch takes (pod,data); a second 'embed'->(pod,data) must drop
+        spec = spec_for((256, 4096, 5120), ("batch", "seq", "embed"))
+        assert spec == P(("pod", "data"), None, None)
+
+
+def test_pod_axis_filtered_on_single_pod():
+    with sharding_ctx(MESH1):
+        spec = spec_for((256, 4096), ("batch", "seq"))
+        assert spec == P("data", None)
+
+
+@pytest.mark.parametrize("arch", sorted(list_archs()))
+@pytest.mark.parametrize("mesh", [MESH1, MESH2], ids=["single", "multi"])
+def test_all_params_get_specs(arch, mesh):
+    cfg = get_config(arch)
+    params, axes = api.init_params(cfg, abstract=True)
+    with sharding_ctx(mesh):
+        specs = tree_pspecs(params, axes, mesh)
+    assert set(specs) == set(params)
+    # every spec is consistent with its array rank
+    for k, spec in specs.items():
+        assert len(spec) <= len(params[k].shape), k
+    # at least half of the big tensors are actually sharded
+    big = [k for k, v in params.items()
+           if len(v.shape) >= 2 and min(v.shape) >= 64]
+    sharded = [k for k in big
+               if any(s is not None for s in specs[k])]
+    assert len(sharded) >= len(big) // 2, (arch, len(sharded), len(big))
+
+
+@pytest.mark.parametrize("arch", sorted(list_archs()))
+def test_cache_specs_shardable(arch):
+    cfg = get_config(arch)
+    specs = api.cache_specs(cfg, 128, 32768)
+    with sharding_ctx(MESH1):
+        for k, (shape, dt, ax) in specs.items():
+            spec = spec_for(shape, ax)
+            assert len(spec) <= len(shape)
+
+
+def test_quantized_params_keep_specs():
+    cfg = get_config("llama3.2-1b")
+    params, axes = api.init_params(cfg, abstract=True)
+    qp, qa = api.quantize_for_serving(cfg, params, axes)
+    n_scales = sum(1 for k in qp if k.endswith("_scale"))
+    assert n_scales > 0
+    with sharding_ctx(MESH1):
+        specs = tree_pspecs(qp, qa, MESH1)
+    assert set(specs) == set(qp)
