@@ -30,6 +30,47 @@ from repro.train.optimizer import OptConfig
 from repro.train.trainer import Trainer, TrainerConfig, batch_iterator
 
 
+def throughput(batch_size: int = 4096, n_batches: int = 12,
+               seed: int = 0, include_dense: bool = True,
+               include_pallas: bool = True) -> Dict:
+    """Data-plane packets/sec of ``process_batch_fast`` at ``batch_size``.
+
+    Compares the O(n log n) sort/segment admission path against the seed's
+    O(n^2) dense backlog count (``dense_backlog=True``) and the Pallas
+    rate-gate backend (interpret mode on CPU).  The acceptance bar for the
+    device-resident fast path is >= 3x pps over the dense seed path at
+    batch_size=4096 on CPU.
+    """
+    import jax
+
+    from repro.core.data_engine import engine as de
+    from repro.core.data_engine.state import init_state, make_packets
+
+    rng = np.random.default_rng(seed)
+    pk = make_packets(rng, batch_size)
+    jb = {k: jnp.asarray(v) for k, v in pk.items()}
+    modes = [("segment", EngineConfig())]
+    if include_pallas:
+        modes.append(("pallas_gate", EngineConfig(gate_backend="pallas")))
+    if include_dense:
+        modes.append(("dense_seed", EngineConfig(dense_backlog=True)))
+    res: Dict = {"batch_size": batch_size}
+    for name, ecfg in modes:
+        state = init_state(ecfg)
+        state, out = de.process_batch_fast(state, dict(jb), ecfg)
+        jax.block_until_ready(out["granted"])          # compile
+        t0 = time.perf_counter()
+        for _ in range(n_batches):
+            state, out = de.process_batch_fast(state, dict(jb), ecfg)
+        jax.block_until_ready(out["granted"])
+        dt = (time.perf_counter() - t0) / n_batches
+        res[name] = {"us_per_batch": dt * 1e6, "pps": batch_size / dt}
+    if include_dense:
+        res["speedup_vs_dense"] = (res["segment"]["pps"]
+                                   / res["dense_seed"]["pps"])
+    return res
+
+
 def train_model(seed=0, steps=300, n_flows=400):
     flows = make_flows("iscx", n_flows, seed=seed, min_per_class=20)
     x, y, _ = windows_from_flows(flows)
@@ -88,7 +129,13 @@ def run_scale(cfg, qp, n_flows: int, pkts: int = 60_000,
 
 def main(out_path: str = None,
          scales=((1000, 0.5), (1000, 4.0), (1000, 16.0), (1000, 64.0),
-                 (4000, 16.0), (8000, 16.0))) -> List:
+                 (4000, 16.0), (8000, 16.0)),
+         include_throughput: bool = True) -> List:
+    # run.py measures throughput as its own row; it passes
+    # include_throughput=False here to avoid paying for the sweep twice
+    tp = throughput() if include_throughput else None
+    if tp is not None:
+        print({"fastpath": tp}, flush=True)
     cfg, qp = train_model()
     rows = []
     for n, oversub in scales:
@@ -98,8 +145,11 @@ def main(out_path: str = None,
         rows.append(r)
         print(r, flush=True)
     if out_path:
+        doc = {"scales": rows}
+        if tp is not None:
+            doc["fastpath_throughput"] = tp
         with open(out_path, "w") as f:
-            json.dump(rows, f, indent=1)
+            json.dump(doc, f, indent=1)
     return rows
 
 

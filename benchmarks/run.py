@@ -3,6 +3,7 @@
 Prints ``name,us_per_call,derived`` CSV rows per the repo convention; full
 JSON artifacts land in benchmarks/results/.
 
+  throughput   — data-plane pps at batch 4096 (segment vs seed dense path)
   accuracy     — Table 2 (macro-F1, 9 schemes x 2 tasks)
   resource     — Tables 3+4 (SRAM/VMEM/MAC proxies)
   scalability  — Figure 10 (F1 vs concurrency/throughput)
@@ -45,6 +46,16 @@ def main() -> None:
 
     print("name,us_per_call,derived")
 
+    if want("throughput"):
+        from benchmarks import bench_scalability
+        n_b = 4 if args.fast else 12
+        res = bench_scalability.throughput(n_batches=n_b)
+        with open(os.path.join(RESULTS, "throughput.json"), "w") as f:
+            json.dump(res, f, indent=1)
+        _row("fastpath_throughput", res["segment"]["us_per_batch"],
+             f"pps={res['segment']['pps']:.0f};"
+             f"speedup_vs_dense={res['speedup_vs_dense']:.1f}x")
+
     if want("accuracy"):
         from benchmarks import bench_accuracy
         t0 = time.time()
@@ -72,7 +83,8 @@ def main() -> None:
             ((1000, 0.5), (1000, 4.0), (1000, 16.0), (1000, 64.0),
              (4000, 16.0), (8000, 16.0))
         rows = bench_scalability.main(
-            os.path.join(RESULTS, "scalability.json"), scales=scales)
+            os.path.join(RESULTS, "scalability.json"), scales=scales,
+            include_throughput=False)
         drop = (rows[0]["macro_f1"] - rows[-1]["macro_f1"]) \
             / max(rows[0]["macro_f1"], 1e-9)
         _row("scalability", (time.time() - t0) * 1e6,

@@ -87,14 +87,24 @@ def process_batch_fast(state: Dict, packets: Dict, cfg: EngineConfig
     first_in_batch = _first_occurrence(slot, cfg.n_slots)
     is_new = first_in_batch & ((stored == 0) | (stored != h))
     # probability lookup against batch-start backlog (approximation)
+    run = (_running_count_dense(slot, n) if cfg.dense_backlog
+           else _running_count(slot, n))
     t_i = jnp.maximum(ts - state["bklog_t"][slot], 0)
-    c_i = jnp.maximum(state["bklog_n"][slot], 0) + _running_count(slot, n)
-    ti_bin = jnp.clip(t_i >> cfg.lut.t_shift, 0, cfg.lut.t_bins - 1)
-    ci_bin = jnp.clip(c_i >> cfg.lut.c_shift, 0, cfg.lut.c_bins - 1)
-    prob = state["lut"][ti_bin, ci_bin]
+    c_i = jnp.maximum(state["bklog_n"][slot], 0) + run
     key, sub = jax.random.split(state["rng_key"])
     rand = jax.random.randint(sub, (n,), 0, 1 << cfg.lut.prob_bits, I32)
-    selected = rand < prob
+    if cfg.gate_backend == "ref":
+        ti_bin = jnp.clip(t_i >> cfg.lut.t_shift, 0, cfg.lut.t_bins - 1)
+        ci_bin = jnp.clip(c_i >> cfg.lut.c_shift, 0, cfg.lut.c_bins - 1)
+        prob = state["lut"][ti_bin, ci_bin]
+        selected = rand < prob
+    else:
+        from repro.kernels.rate_gate.ops import rate_gate
+        selected = rate_gate(t_i, c_i, state["lut"], rand16=rand,
+                             seed=rand[0], t_shift=cfg.lut.t_shift,
+                             c_shift=cfg.lut.c_shift,
+                             prob_bits=cfg.lut.prob_bits,
+                             backend=cfg.gate_backend)
     # bucket: spend_i <= burst credit (capped at batch start) + refill_i.
     # The cap limits *idle accumulation*, not throughput: refill earned
     # during the batch is spendable immediately (matches the scan semantics
@@ -154,7 +164,26 @@ def _first_occurrence(slot: jax.Array, n_slots: int) -> jax.Array:
 
 
 def _running_count(slot: jax.Array, n: int) -> jax.Array:
-    """#earlier packets in this batch with the same slot (backlog adjust)."""
+    """#earlier packets in this batch with the same slot (backlog adjust).
+
+    O(n log n) sort/segment formulation: stable-sort packets by slot (ties
+    keep batch order), then each packet's rank within its equal-slot run —
+    position minus the running maximum of run-start positions — IS the
+    count of earlier same-slot packets.  No n x n intermediate, so batch
+    sizes of 4096-8192 stay cache-resident.
+    """
+    order = jnp.argsort(slot, stable=True)
+    s = slot[order]
+    idx = jnp.arange(n, dtype=I32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), s[1:] != s[:-1]])
+    seg_first = jax.lax.cummax(jnp.where(is_start, idx, 0))
+    run_sorted = idx - seg_first
+    return jnp.zeros((n,), I32).at[order].set(run_sorted)
+
+
+def _running_count_dense(slot: jax.Array, n: int) -> jax.Array:
+    """O(n^2) reference for ``_running_count`` (tests + throughput bench)."""
     eq = slot[None, :] == slot[:, None]
     tri = jnp.tril(jnp.ones((n, n), bool), k=-1)
     return jnp.sum(eq & tri, axis=1).astype(I32)

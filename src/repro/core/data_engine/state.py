@@ -34,6 +34,14 @@ class EngineConfig:
     queue_len: int = 64             # bucket cap <= queue length (§4.2)
     window_us: int = 1_000_000      # T_w statistics window
     lut: LUTConfig = dataclasses.field(default_factory=LUTConfig)
+    # probability-gate backend for the vectorized fast path:
+    #   "ref"        inline jnp LUT lookup (bit-exact with the scan mode)
+    #   "pallas"     rate_gate Pallas kernel, interpret mode (CPU fallback)
+    #   "pallas_tpu" compiled Pallas kernel with the on-core PRNG
+    gate_backend: str = "ref"
+    # use the O(n^2) dense backlog count instead of the sort/segment path
+    # (reference implementation, kept for tests and the throughput bench)
+    dense_backlog: bool = False
 
     @property
     def n_slots(self) -> int:

@@ -11,11 +11,24 @@ second (the paper's F in V=min(F, B/W)); results return to the switch with
 ``loop_latency_us`` (PCB interconnect, Fig. 11: 1-3us).  Flows with a
 verdict are classified per-packet at line rate from the flow table; packets
 of unclassified flows fall back to the switch decision tree.
+
+Two trace drivers share the same semantics:
+
+* **Device path** (default, fast mode): ``run_trace`` pre-chunks the whole
+  stream into ``[n_chunks, batch_size]`` device arrays and runs a jitted
+  ``lax.scan`` per control-plane window — Vector I/O enqueue/dequeue, the
+  Model-Engine service budget, and the loop-latency delay line are all
+  array state inside the scan, so the only host synchronization is the
+  control-plane LUT rebuild at each T_w window boundary.
+* **Host path** (``device_path=False`` or scan mode): the original
+  batch-at-a-time ``step`` loop with Python-list in-flight results; kept as
+  the reference the device path is tested against.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -26,9 +39,16 @@ from repro.configs.fenix_models import TrafficModelConfig
 from repro.core.data_engine import engine as de
 from repro.core.data_engine import rate_limiter as rl
 from repro.core.data_engine.state import EngineConfig, init_state
+from repro.core.model_engine import delay_line as dl
 from repro.core.model_engine import vector_io as vio
 from repro.core.model_engine.inference import EngineModel
 from repro.core.data_engine import flow_tracker as ft
+
+I32 = jnp.int32
+
+# packet-stream fields consumed by the data plane
+PKT_KEYS = ("src_ip", "dst_ip", "src_port", "dst_port", "proto",
+            "ts_us", "pkt_len")
 
 
 @dataclasses.dataclass
@@ -39,6 +59,7 @@ class FenixConfig:
     loop_latency_us: int = 3         # switch->FPGA->switch (Fig. 11)
     fast_mode: bool = True           # vectorized admission (simulator)
     control_plane_every: int = 8     # LUT refresh cadence (batches)
+    device_path: bool = True         # run_trace as jitted lax.scan
 
 
 class FenixSystem:
@@ -63,18 +84,28 @@ class FenixSystem:
         self.state = init_state(cfg.engine)
         self.queues = vio.init_queues(cfg.io)
         self.stats = {"packets": 0, "granted": 0, "inferences": 0,
-                      "classified_pkts": 0, "tree_pkts": 0, "dropped_q": 0}
-        # in-flight inference results: (deliver_ts, slot, hash, cls)
+                      "classified_pkts": 0, "tree_pkts": 0, "dropped_q": 0,
+                      # results dropped by the fixed-capacity device delay
+                      # line (always 0 on the host path, whose in-flight
+                      # list is unbounded; nonzero here flags that the
+                      # device run diverged and io.queue_len needs raising)
+                      "dropped_inflight": 0}
+        # in-flight inference results, host view: (deliver_ts, slot, h, cls)
         self._inflight: List[Tuple[int, int, int, int]] = []
+        # ... and the equivalent device-resident delay line
+        self._dl = dl.init(cfg.io.queue_len)
+        self._dl_dirty = False
+        self._scan_jit = None
+        self._step_jit = None
 
-    # -- one simulation step ------------------------------------------------
+    # -- one simulation step (host reference path) --------------------------
     def step(self, packets: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
         """Process one packet batch; returns per-packet verdicts + masks."""
         cfg = self.cfg
+        self._sync_inflight_to_host()
         n = len(packets["ts_us"])
         batch = {k: jnp.asarray(v) for k, v in packets.items()
-                 if k in ("src_ip", "dst_ip", "src_port", "dst_port",
-                          "proto", "ts_us", "pkt_len")}
+                 if k in PKT_KEYS}
         now = int(packets["ts_us"][-1])
         # deliver finished inferences whose latency elapsed
         self._deliver(now)
@@ -100,10 +131,13 @@ class FenixSystem:
                 for a, b in zip(fi, fp)]) if len(fi) else feats
         self.queues = vio.enqueue_batch(self.queues, cfg.io, slots, hashes,
                                         feats)
-        # model engine serves a batch bounded by its service rate
+        # model engine serves a batch bounded by its service rate V
+        # (shared float32 formula so host and device paths agree exactly)
         span_us = max(int(packets["ts_us"][-1]) - int(packets["ts_us"][0]),
                       1)
-        budget = max(1, int(cfg.engine.token_rate_per_us * span_us))
+        budget = int(vio.service_budget(span_us,
+                                        cfg.engine.token_rate_per_us,
+                                        cfg.io.queue_len))
         self.queues, s2, h2, f2 = vio.dequeue_batch(self.queues, cfg.io,
                                                     budget)
         if len(s2):
@@ -147,11 +181,136 @@ class FenixSystem:
         self.state = ft.window_reset(self.state, self.cfg.engine,
                                      self.state["t_last"])
 
-    # -- full-trace driver --------------------------------------------------
+    # -- in-flight state interop (host list <-> device delay line) ----------
+    def _sync_inflight_to_host(self) -> None:
+        if self._dl_dirty:
+            self._inflight = dl.to_list(self._dl) + self._inflight
+            self._dl = dl.init(self.cfg.io.queue_len)
+            self._dl_dirty = False
+
+    def _sync_inflight_to_device(self) -> None:
+        for (t, slot, h, cls) in self._inflight:
+            self._dl = dl.push(
+                self._dl, jnp.asarray(t, I32),
+                jnp.asarray([slot], I32),
+                jnp.asarray([h], jnp.uint32),
+                jnp.asarray([cls], I32), jnp.asarray(1, I32))
+        self._inflight = []
+        self._dl_dirty = True
+
+    # -- jitted scan step ----------------------------------------------------
+    def _make_step(self):
+        cfg = self.cfg
+        ecfg, iocfg = cfg.engine, cfg.io
+        model, tree, depth = self.model, self.tree, self.tree_depth
+
+        def step_fn(carry, chunk):
+            state, queues, dline = carry
+            ts = chunk["ts_us"].astype(I32)
+            now = ts[-1]
+            state, dline = dl.deliver(state, dline, now, ecfg.n_slots)
+            batch = {k: chunk[k] for k in PKT_KEYS}
+            state, out = de.process_batch_fast(state, batch, ecfg)
+            granted = out["granted"]
+            payload = chunk.get("payload", out["payload"])
+            queues = vio.enqueue_device(queues, iocfg, granted,
+                                        out["slot"], out["hash"], payload)
+            span = jnp.maximum(ts[-1] - ts[0], 1)
+            budget = vio.service_budget(span, ecfg.token_rate_per_us,
+                                        iocfg.queue_len)
+            queues, s2, h2, f2, cnt = vio.dequeue_device(queues, iocfg,
+                                                         budget)
+            cls = model.infer(f2)
+            dline = dl.push(dline, now + cfg.loop_latency_us, s2, h2, cls,
+                            cnt)
+            verdict = out["verdict"]
+            n_tree = jnp.asarray(0, I32)
+            if tree is not None:
+                from repro.core.data_engine.decision_tree import predict
+                feats_now = jnp.stack(
+                    [batch["pkt_len"].astype(I32),
+                     jnp.zeros_like(batch["pkt_len"], I32)], axis=-1)
+                pre = predict(tree, feats_now, depth)
+                n_tree = jnp.sum((verdict < 0).astype(I32))
+                verdict = jnp.where(verdict >= 0, verdict, pre)
+            stats = jnp.stack([granted.sum().astype(I32), cnt,
+                               jnp.sum((verdict >= 0).astype(I32)), n_tree])
+            return (state, queues, dline), (verdict, stats)
+
+        return step_fn
+
+    def _ensure_jits(self) -> None:
+        if self._scan_jit is None:
+            step = self._make_step()
+            self._scan_jit = jax.jit(functools.partial(jax.lax.scan, step))
+            self._step_jit = jax.jit(step)
+
+    # -- full-trace drivers --------------------------------------------------
     def run_trace(self, stream: Dict[str, np.ndarray],
                   labels_by_flow: Optional[np.ndarray] = None
                   ) -> Dict[str, np.ndarray]:
-        """Feed a packet stream; returns per-packet verdicts."""
+        """Feed a packet stream; returns per-packet verdicts.
+
+        Fast mode with ``device_path`` runs the jitted scan driver; scan
+        (exact) mode and ``device_path=False`` use the host loop.
+        """
+        cfg = self.cfg
+        if not (cfg.fast_mode and cfg.device_path):
+            return self._run_trace_host(stream)
+        n = len(stream["ts_us"])
+        B = cfg.batch_size
+        arrs = {k: jnp.asarray(stream[k]) for k in PKT_KEYS}
+        if self.oracle is not None and "flow_idx" in stream:
+            from repro.data.synthetic_traffic import oracle_payloads
+            pay = oracle_payloads(self.oracle, stream["flow_idx"],
+                                  stream["flow_pos"], cfg.io.feat_len)
+            arrs["payload"] = jnp.asarray(pay)
+        self._sync_inflight_to_device()
+        self._ensure_jits()
+        n_chunks = n // B
+        chunked = {k: v[:n_chunks * B].reshape((n_chunks, B)
+                                               + v.shape[1:])
+                   for k, v in arrs.items()}
+        tail = ({k: v[n_chunks * B:] for k, v in arrs.items()}
+                if n_chunks * B < n else None)
+        carry = (self.state, self.queues, self._dl)
+        cpe = cfg.control_plane_every
+        verd_parts: List[np.ndarray] = []
+        stat_sum = np.zeros(4, np.int64)
+        for g in range(0, n_chunks, cpe):
+            hi = min(g + cpe, n_chunks)
+            window = {k: v[g:hi] for k, v in chunked.items()}
+            carry, (vd, st) = self._scan_jit(carry, window)
+            verd_parts.append(np.asarray(vd).reshape(-1))
+            stat_sum += np.asarray(st, np.int64).sum(axis=0)
+            self.state, self.queues, self._dl = carry
+            if hi % cpe == 0:
+                # the single host sync per control-plane window
+                self.control_plane()
+                carry = (self.state, self.queues, self._dl)
+        n_batches = n_chunks
+        if tail is not None:
+            carry, (vd, st) = self._step_jit(carry, tail)
+            verd_parts.append(np.asarray(vd))
+            stat_sum += np.asarray(st, np.int64)
+            self.state, self.queues, self._dl = carry
+            n_batches += 1
+            if n_batches % cpe == 0:
+                self.control_plane()
+        self._dl_dirty = True
+        self.stats["packets"] += n
+        self.stats["granted"] += int(stat_sum[0])
+        self.stats["inferences"] += int(stat_sum[1])
+        self.stats["classified_pkts"] += int(stat_sum[2])
+        self.stats["tree_pkts"] += int(stat_sum[3])
+        self.stats["dropped_q"] = int(self.queues["dropped"])
+        self.stats["dropped_inflight"] = int(self._dl["dropped"])
+        verdicts = (np.concatenate(verd_parts).astype(np.int32)
+                    if verd_parts else np.full(n, -1, np.int32))
+        return {"verdict": verdicts}
+
+    def _run_trace_host(self, stream: Dict[str, np.ndarray]
+                        ) -> Dict[str, np.ndarray]:
         cfg = self.cfg
         n = len(stream["ts_us"])
         verdicts = np.full(n, -1, np.int32)

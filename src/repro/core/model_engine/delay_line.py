@@ -1,0 +1,108 @@
+"""Inference-result delay line: the switch<->FPGA loop latency as array state.
+
+The host co-simulation keeps in-flight inference results in a Python list
+of ``(deliver_ts, slot, hash, cls)`` tuples (``FenixSystem._inflight``).
+This module is the jittable equivalent — a fixed-capacity ring whose
+entries are pushed when the Model Engine finishes a batch and delivered to
+the flow table once ``loop_latency_us`` has elapsed — so the whole
+service/delivery loop can live inside ``lax.scan`` with no host round trip.
+
+Delivery order matters: the host path applies results sequentially, so for
+duplicate slots the *last* queued result wins (subject to the per-entry
+hash ownership check).  The vectorized apply reproduces that exactly via a
+stable sort by slot + last-of-run selection, which leaves unique scatter
+indices (deterministic on every backend).
+
+Push times are nondecreasing (batch timestamps are sorted and the loop
+latency is constant), so the due set is always a queue prefix and head
+advancement is a popcount.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+I32 = jnp.int32
+
+
+def init(capacity: int) -> Dict[str, jax.Array]:
+    return {
+        "t": jnp.zeros((capacity,), I32),
+        "slot": jnp.zeros((capacity,), I32),
+        "hash": jnp.zeros((capacity,), jnp.uint32),
+        "cls": jnp.zeros((capacity,), I32),
+        "head": jnp.asarray(0, I32),
+        "tail": jnp.asarray(0, I32),
+        "dropped": jnp.asarray(0, I32),
+    }
+
+
+def push(dl: Dict, deliver_ts: jax.Array, slots: jax.Array,
+         hashes: jax.Array, cls: jax.Array, count: jax.Array) -> Dict:
+    """Append the first ``count`` lanes with delivery time ``deliver_ts``."""
+    from repro.core.model_engine.vector_io import ring_append
+
+    cap = dl["t"].shape[0]
+    n = slots.shape[0]
+    valid = jnp.arange(n, dtype=I32) < count
+    fields = {k: dl[k] for k in ("t", "slot", "hash", "cls")}
+    values = {
+        "t": jnp.broadcast_to(jnp.asarray(deliver_ts).astype(I32), (n,)),
+        "slot": slots.astype(I32),
+        "hash": hashes.astype(jnp.uint32),
+        "cls": cls.astype(I32),
+    }
+    out = dict(dl)
+    fields, out["tail"], out["dropped"] = ring_append(
+        fields, values, dl["head"], dl["tail"], dl["dropped"], cap, valid)
+    out.update(fields)
+    return out
+
+
+def deliver(state: Dict, dl: Dict, now: jax.Array,
+            n_slots: int) -> Tuple[Dict, Dict]:
+    """Apply every queued result with deliver_ts <= now to the flow table.
+
+    Matches ``FenixSystem._deliver``: each result writes ``cls`` only if the
+    slot still holds the same flow hash; among duplicates the last queued
+    write wins.
+    """
+    cap = dl["t"].shape[0]
+    lane = jnp.arange(cap, dtype=I32)
+    in_q = lane < (dl["tail"] - dl["head"])
+    idx = jnp.mod(dl["head"] + lane, cap)
+    t = dl["t"][idx]
+    slots = dl["slot"][idx]
+    hashes = dl["hash"][idx]
+    cls = dl["cls"][idx]
+    due = in_q & (t <= now.astype(I32))
+    owner = state["hash"][slots] == hashes
+    apply = due & owner
+    # deterministic last-wins: stable-sort lanes by slot (sentinel for
+    # non-applying lanes), keep the last lane of each equal-slot run
+    skey = jnp.where(apply, slots, n_slots)
+    order = jnp.argsort(skey, stable=True)
+    s_sorted = skey[order]
+    is_last = jnp.concatenate(
+        [s_sorted[1:] != s_sorted[:-1], jnp.ones((1,), bool)])
+    write = is_last & (s_sorted < n_slots)
+    tgt = jnp.where(write, s_sorted, n_slots)
+    new_state = dict(state)
+    new_state["cls"] = state["cls"].at[tgt].set(cls[order], mode="drop")
+    out = dict(dl)
+    out["head"] = (dl["head"] + jnp.sum(due.astype(I32))).astype(I32)
+    return new_state, out
+
+
+def to_list(dl: Dict) -> list:
+    """Drain to the host-side list format (interop with the legacy path)."""
+    import numpy as np
+    head, tail = int(dl["head"]), int(dl["tail"])
+    cap = dl["t"].shape[0]
+    idx = (head + np.arange(tail - head)) % cap
+    t, slot = np.asarray(dl["t"]), np.asarray(dl["slot"])
+    h, cls = np.asarray(dl["hash"]), np.asarray(dl["cls"])
+    return [(int(t[i]), int(slot[i]), int(h[i]), int(cls[i])) for i in idx]

@@ -5,12 +5,21 @@ FIFO while vectors run through the DNN; completed inferences are paired with
 the id at the FIFO head and shipped back to the switch.  FIFOs are fixed
 arrays + head/tail counters (the asynchronous-FIFO clock-domain decoupling
 becomes explicit queue state in the co-simulation).
+
+Two interchangeable implementations share the queue-state dict:
+
+* ``enqueue_batch`` / ``dequeue_batch`` — host-side (NumPy loop) reference,
+  kept for the step-by-step co-simulation and as the oracle in tests.
+* ``enqueue_device`` / ``dequeue_device`` — jittable masked-scatter
+  versions with identical FIFO/drop semantics, usable inside ``lax.scan``
+  (the Tbps trace driver).  Dequeue returns fixed-shape lanes
+  (``serve_max``) plus a count so downstream shapes stay static.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +33,15 @@ class IOConfig:
     queue_len: int = 1024
     feat_len: int = 9
     feat_dim: int = 2
+    # static per-step dequeue lane count for the device path; None means
+    # queue_len, which makes dequeue_device bit-identical to the host loop
+    # (occupancy never exceeds queue_len).  Set lower to trade a service
+    # cap for less padded Model-Engine compute per step.
+    serve_max: Optional[int] = None
+
+    @property
+    def serve_lanes(self) -> int:
+        return self.queue_len if self.serve_max is None else self.serve_max
 
 
 def init_queues(cfg: IOConfig) -> Dict[str, jax.Array]:
@@ -76,3 +94,81 @@ def dequeue_batch(q: Dict, cfg: IOConfig, n: int
 
 def occupancy(q: Dict) -> int:
     return int(q["tail"]) - int(q["head"])
+
+
+# -- device-resident (jittable) FIFO ops ------------------------------------
+
+def ring_append(fields: Dict[str, jax.Array], values: Dict[str, jax.Array],
+                head: jax.Array, tail: jax.Array, dropped: jax.Array,
+                cap: int, valid: jax.Array
+                ) -> Tuple[Dict[str, jax.Array], jax.Array, jax.Array]:
+    """Masked append of ``values`` lanes into ring-buffer ``fields``.
+
+    Valid lanes are packed in lane order; lanes that would overflow the
+    ring are counted into ``dropped`` (same semantics as the host loop).
+    Shared by the Vector I/O FIFO and the inference delay line.  Returns
+    (fields', tail', dropped').
+    """
+    rank = jnp.cumsum(valid.astype(I32))          # 1-based among valid lanes
+    fits = valid & (tail + rank - head <= cap)
+    # ring position for accepted lanes; cap (out of range) drops the rest
+    pos = jnp.where(fits, jnp.mod(tail + rank - 1, cap), cap)
+    out = {k: fields[k].at[pos].set(values[k], mode="drop") for k in fields}
+    n_in = jnp.sum(fits.astype(I32))
+    n_dropped = (dropped + jnp.sum(valid.astype(I32)) - n_in).astype(I32)
+    return out, (tail + n_in).astype(I32), n_dropped
+
+
+def service_budget(span_us, rate_per_us: float, cap: int) -> jax.Array:
+    """Model-Engine inferences servable in ``span_us``: clip(V*span, 1, cap).
+
+    One shared (jittable, float32) formula so the host loop and the device
+    scan agree bit-for-bit.  ``cap`` at queue_len loses nothing — dequeue
+    is bounded by occupancy <= queue_len anyway — and keeps the product
+    inside int32 range.
+    """
+    b = jnp.floor(jnp.asarray(span_us).astype(jnp.float32)
+                  * jnp.float32(rate_per_us))
+    return jnp.clip(b, 1, cap).astype(I32)
+
+
+def enqueue_device(q: Dict, cfg: IOConfig, valid: jax.Array,
+                   slots: jax.Array, hashes: jax.Array,
+                   feats: jax.Array) -> Dict:
+    """Masked vectorized enqueue: same FIFO/drop semantics as the host loop.
+
+    ``valid`` [n] selects lanes to append (in lane order); lanes that would
+    overflow the ring are counted in ``dropped`` exactly like the host path.
+    """
+    fields = {k: q[k] for k in ("id_q_slot", "id_q_hash", "feat_q")}
+    values = {"id_q_slot": slots.astype(I32),
+              "id_q_hash": hashes.astype(jnp.uint32),
+              "feat_q": feats.astype(I32)}
+    out = dict(q)
+    fields, out["tail"], out["dropped"] = ring_append(
+        fields, values, q["head"], q["tail"], q["dropped"],
+        cfg.queue_len, valid)
+    out.update(fields)
+    return out
+
+
+def dequeue_device(q: Dict, cfg: IOConfig, budget: jax.Array
+                   ) -> Tuple[Dict, jax.Array, jax.Array, jax.Array,
+                              jax.Array]:
+    """Pop min(budget, occupancy, serve_max) entries in FIFO order.
+
+    Returns (q', slots[serve_lanes], hashes[serve_lanes],
+    feats[serve_lanes, ...], count); lanes >= count are zero-filled.
+    """
+    cap = cfg.queue_len
+    head, tail = q["head"], q["tail"]
+    take = jnp.minimum(jnp.minimum(budget.astype(I32), tail - head),
+                       cfg.serve_lanes)
+    lane = jnp.arange(cfg.serve_lanes, dtype=I32)
+    idx = jnp.where(lane < take, jnp.mod(head + lane, cap), cap)
+    slots = q["id_q_slot"].at[idx].get(mode="fill", fill_value=0)
+    hashes = q["id_q_hash"].at[idx].get(mode="fill", fill_value=0)
+    feats = q["feat_q"].at[idx].get(mode="fill", fill_value=0)
+    out = dict(q)
+    out["head"] = (head + take).astype(I32)
+    return out, slots, hashes, feats, take

@@ -149,6 +149,32 @@ def ring_window(feats: np.ndarray, end: int, win: int) -> np.ndarray:
     return w
 
 
+def oracle_payloads(oracle: List[np.ndarray], flow_idx: np.ndarray,
+                    flow_pos: np.ndarray, win: int) -> np.ndarray:
+    """Ground-truth ring window for EVERY packet of a stream, vectorized.
+
+    ``oracle[f]`` is flow f's [n_f, feat_dim] feature sequence; packet i of
+    the stream gets ``ring_window(oracle[flow_idx[i]], flow_pos[i], win)``.
+    Returns [n, win, feat_dim] int32 — the device trace driver gathers
+    granted packets' windows from this array instead of re-deriving them
+    per batch on the host.
+    """
+    from numpy.lib.stride_tricks import sliding_window_view
+
+    flow_idx = np.asarray(flow_idx)
+    flow_pos = np.asarray(flow_pos)
+    feat_dim = oracle[0].shape[1] if len(oracle) else 2
+    out = np.zeros((len(flow_idx), win, feat_dim), np.int32)
+    for fi in np.unique(flow_idx):
+        feats = np.asarray(oracle[int(fi)], np.int32)
+        padded = np.concatenate(
+            [np.zeros((win - 1, feats.shape[1]), np.int32), feats])
+        sw = sliding_window_view(padded, win, axis=0)   # [n_f, feat, win]
+        mask = flow_idx == fi
+        out[mask] = np.transpose(sw[flow_pos[mask]], (0, 2, 1))
+    return out
+
+
 def windows_from_flows(flows: List[Flow], win: int = 9,
                        stride: int = 4, max_windows_per_flow: int = 16,
                        seed: int = 0

@@ -1,0 +1,90 @@
+"""Minimal stand-in for ``hypothesis`` when the real package is absent.
+
+CI installs the real hypothesis (requirements-dev.txt) and gets full
+property sweeps with shrinking.  Offline/air-gapped environments fall back
+to this shim (installed into ``sys.modules`` by ``conftest.py``): each
+``@given`` test runs ``max_examples`` deterministic pseudo-random samples
+drawn from the declared strategies — enough to keep the invariants
+exercised without the dependency.
+
+Only the API surface this repo uses is implemented: ``given``,
+``settings(max_examples=, deadline=)`` and ``strategies.integers/floats/
+sampled_from``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(int(min_value), int(max_value)))
+
+
+def floats(min_value, max_value, **_kw):
+    return _Strategy(lambda r: r.uniform(float(min_value), float(max_value)))
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    return _Strategy(lambda r: r.choice(seq))
+
+
+def given(**strats):
+    for name, s in strats.items():
+        if not isinstance(s, _Strategy):
+            raise TypeError(f"unsupported strategy for {name!r}: {s!r}")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(0xF381)
+            for _ in range(n):
+                drawn = {k: s._sample(rng) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # hide the strategy-supplied parameters from pytest's fixture
+        # resolution (real hypothesis does the same)
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strats])
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def install() -> None:
+    """Register this shim as the ``hypothesis`` package in sys.modules."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = integers
+    strategies.floats = floats
+    strategies.sampled_from = sampled_from
+    mod.strategies = strategies
+    mod.__is_repro_stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -2,3 +2,23 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:
+    import hypothesis  # noqa: F401  (real package, used in CI)
+except ModuleNotFoundError:
+    from _hypothesis_stub import install
+
+    install()
+
+
+def abstract_mesh(*axes):
+    """AbstractMesh across jax versions: 0.4.3x takes ((name, size), ...),
+    newer releases take (sizes, names).  ``axes`` are (name, size) pairs."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(axes))
+    except TypeError:
+        return AbstractMesh(tuple(s for _, s in axes),
+                            tuple(n for n, _ in axes))

@@ -1,0 +1,200 @@
+"""Device-resident trace driver vs the host reference loop.
+
+The tentpole invariant: the jitted ``lax.scan`` path (device FIFO, array
+delay line, in-scan Model-Engine service) produces bit-identical verdicts
+and stats to the original batch-at-a-time Python loop.  Also covers the
+jittable Vector I/O ops against the host oracle and the delay line against
+the Python-list in-flight semantics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.fenix_models import fenix_cnn
+from repro.core.data_engine.decision_tree import fit_tree, tree_arrays
+from repro.core.data_engine.state import (EngineConfig, hash_five_tuple,
+                                          init_state)
+from repro.core.fenix import FenixConfig, FenixSystem
+from repro.core.model_engine import delay_line as dl
+from repro.core.model_engine import vector_io as vio
+from repro.core.model_engine.inference import EngineModel
+from repro.data.synthetic_traffic import (make_flows, packet_stream,
+                                          windows_from_flows)
+from repro.models import traffic
+from repro.quant.quantize import quantize_traffic
+
+I32 = jnp.int32
+
+
+# -- Vector I/O: device ops == host oracle ----------------------------------
+
+def test_enqueue_dequeue_device_matches_host():
+    cfg = vio.IOConfig(queue_len=16)
+    rng = np.random.default_rng(0)
+    qh = vio.init_queues(cfg)
+    qd = vio.init_queues(cfg)
+    for step in range(30):
+        n = int(rng.integers(1, 12))
+        valid = rng.random(n) < 0.7
+        slots = rng.integers(0, 100, n).astype(np.int32)
+        hashes = rng.integers(1, 2**31, n).astype(np.uint32)
+        feats = rng.integers(0, 50, (n, cfg.feat_len, cfg.feat_dim)
+                             ).astype(np.int32)
+        qh = vio.enqueue_batch(qh, cfg, slots[valid], hashes[valid],
+                               feats[valid])
+        qd = vio.enqueue_device(qd, cfg, jnp.asarray(valid),
+                                jnp.asarray(slots), jnp.asarray(hashes),
+                                jnp.asarray(feats))
+        budget = int(rng.integers(0, 10))
+        qh, s1, h1, f1 = vio.dequeue_batch(qh, cfg, budget)
+        qd, s2, h2, f2, cnt = vio.dequeue_device(qd, cfg,
+                                                 jnp.asarray(budget))
+        cnt = int(cnt)
+        assert cnt == len(s1), step
+        assert (np.asarray(s2)[:cnt] == s1).all()
+        assert (np.asarray(h2)[:cnt] == h1).all()
+        assert (np.asarray(f2)[:cnt] == f1).all()
+        assert int(qh["dropped"]) == int(qd["dropped"])
+        assert vio.occupancy(qh) == vio.occupancy(qd)
+
+
+def test_dequeue_device_respects_serve_lanes_cap():
+    cfg = vio.IOConfig(queue_len=32, serve_max=4)
+    q = vio.init_queues(cfg)
+    n = 10
+    q = vio.enqueue_device(q, cfg, jnp.ones(n, bool),
+                           jnp.arange(n, dtype=I32),
+                           jnp.arange(1, n + 1, dtype=jnp.uint32),
+                           jnp.zeros((n, cfg.feat_len, cfg.feat_dim), I32))
+    q, s, h, f, cnt = vio.dequeue_device(q, cfg, jnp.asarray(100))
+    assert int(cnt) == 4 and s.shape == (4,)
+    assert list(np.asarray(s)) == [0, 1, 2, 3]
+
+
+# -- delay line == Python-list in-flight semantics ---------------------------
+
+def _list_deliver(state, inflight, now):
+    """The legacy FenixSystem._deliver, as a pure oracle."""
+    from repro.core.data_engine import flow_tracker as ft
+    remain = []
+    for (t, slot, h, cls) in inflight:
+        if t <= now:
+            state = ft.apply_inference_result(
+                state, jnp.asarray(slot), jnp.asarray(cls),
+                jnp.asarray(h, jnp.uint32))
+        else:
+            remain.append((t, slot, h, cls))
+    return state, remain
+
+
+def test_delay_line_matches_python_list():
+    """Jitted delivery == sequential list: ordering, hash check, last-wins."""
+    cfg = EngineConfig(n_slots_log2=6)
+    rng = np.random.default_rng(1)
+    state_a = init_state(cfg)
+    state_b = init_state(cfg)
+    # flow table with 20 occupied slots
+    slots = rng.choice(cfg.n_slots, 20, replace=False).astype(np.int32)
+    hashes = rng.integers(1, 2**31, 20).astype(np.uint32)
+    for st in (state_a, state_b):
+        st["hash"] = st["hash"].at[jnp.asarray(slots)].set(
+            jnp.asarray(hashes))
+    dline = dl.init(64)
+    inflight = []
+    deliver_jit = jax.jit(dl.deliver, static_argnames=("n_slots",))
+    now = 0
+    for rounds in range(6):
+        # push a batch with duplicate slots and some stale hashes
+        k = int(rng.integers(1, 8))
+        pick = rng.integers(0, 20, k)
+        s = slots[pick]
+        h = hashes[pick].copy()
+        stale = rng.random(k) < 0.3
+        h[stale] += 1                      # evicted-flow results must drop
+        cls = rng.integers(0, 7, k).astype(np.int32)
+        t_del = now + int(rng.integers(1, 30))
+        inflight += [(t_del, int(s[i]), int(h[i]), int(cls[i]))
+                     for i in range(k)]
+        dline = dl.push(dline, jnp.asarray(t_del, I32), jnp.asarray(s, I32),
+                        jnp.asarray(h, jnp.uint32), jnp.asarray(cls, I32),
+                        jnp.asarray(k, I32))
+        now += int(rng.integers(0, 40))
+        state_a, inflight = _list_deliver(state_a, inflight, now)
+        state_b, dline = deliver_jit(state_b, dline, jnp.asarray(now, I32),
+                                     n_slots=cfg.n_slots)
+        assert (np.asarray(state_a["cls"])
+                == np.asarray(state_b["cls"])).all(), rounds
+        assert len(inflight) == int(dline["tail"]) - int(dline["head"])
+
+
+# -- full system: device scan == host loop ----------------------------------
+
+@pytest.fixture(scope="module")
+def small_system():
+    flows = make_flows("iscx", 50, seed=11)
+    x, y, _ = windows_from_flows(flows)
+    cfg = fenix_cnn(7)
+    params = traffic.init(cfg, 0)       # untrained: fidelity is not at stake
+    qp = quantize_traffic(params, cfg, jnp.asarray(x[:128]))
+    model = EngineModel(cfg, qp)
+    tree = tree_arrays(fit_tree(x[:, -1, :], y, depth=4, num_classes=7))
+    stream = packet_stream(flows, limit=3000)
+    oracle = [np.stack([f.pkt_len, f.ipd_us], -1).astype(np.int32)
+              for f in flows]
+    return model, tree, stream, oracle
+
+
+def _fresh(model, tree, oracle, device, batch_size=512, cpe=3):
+    return FenixSystem(
+        FenixConfig(batch_size=batch_size, control_plane_every=cpe,
+                    device_path=device),
+        model, tree=tree, oracle_windows=oracle)
+
+
+def test_device_trace_matches_host_loop(small_system):
+    model, tree, stream, oracle = small_system
+    sys_d = _fresh(model, tree, oracle, device=True)
+    sys_h = _fresh(model, tree, oracle, device=False)
+    vd = sys_d.run_trace(stream)["verdict"]
+    vh = sys_h.run_trace(stream)["verdict"]
+    assert sys_d.stats == sys_h.stats
+    assert (vd == vh).all()
+    assert sys_d.stats["inferences"] > 0
+    assert sys_d.stats["granted"] > 0
+
+
+def test_device_trace_matches_host_loop_no_oracle_no_tree(small_system):
+    model, _, stream, _ = small_system
+    sys_d = _fresh(model, None, None, device=True, batch_size=256, cpe=4)
+    sys_h = _fresh(model, None, None, device=False, batch_size=256, cpe=4)
+    vd = sys_d.run_trace(stream)["verdict"]
+    vh = sys_h.run_trace(stream)["verdict"]
+    assert sys_d.stats == sys_h.stats
+    assert (vd == vh).all()
+
+
+def test_device_trace_uneven_tail_batch(small_system):
+    """Remainder chunk (n % batch_size != 0) goes through the same path."""
+    model, tree, stream, oracle = small_system
+    cut = {k: v[:1234] for k, v in stream.items()}
+    sys_d = _fresh(model, tree, oracle, device=True, batch_size=500)
+    sys_h = _fresh(model, tree, oracle, device=False, batch_size=500)
+    vd = sys_d.run_trace(cut)["verdict"]
+    vh = sys_h.run_trace(cut)["verdict"]
+    assert len(vd) == 1234
+    assert sys_d.stats == sys_h.stats
+    assert (vd == vh).all()
+
+
+def test_step_after_device_trace_interops(small_system):
+    """Host step() after a device run drains the device delay line."""
+    model, tree, stream, oracle = small_system
+    sys_ = _fresh(model, tree, oracle, device=True, batch_size=512)
+    first = {k: v[:2048] for k, v in stream.items()}
+    sys_.run_trace(first)
+    rest = {k: v[2048:2560] for k, v in stream.items()}
+    out = sys_.step(rest)
+    assert len(out["verdict"]) == 512
+    assert sys_.stats["packets"] == 2560

@@ -3,15 +3,17 @@ no devices needed; the compile-level proof is launch/dryrun.py)."""
 
 import jax
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, list_archs
 from repro.models import api
 from repro.models.param import (DEFAULT_RULES, sharding_ctx, spec_for,
                                 tree_pspecs)
 
-MESH1 = AbstractMesh((16, 16), ("data", "model"))
-MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+from conftest import abstract_mesh
+
+MESH1 = abstract_mesh(("data", 16), ("model", 16))
+MESH2 = abstract_mesh(("pod", 2), ("data", 16), ("model", 16))
 
 
 def test_spec_divisibility_fallback():

@@ -162,11 +162,12 @@ def test_compressed_training_converges():
 
 
 def test_plan_remesh_abstract():
-    from jax.sharding import AbstractMesh
     from repro.configs import get_config
 
+    from conftest import abstract_mesh
+
     cfg = get_config("llama3.2-1b")
-    mesh = AbstractMesh((4, 4), ("data", "model"))
+    mesh = abstract_mesh(("data", 4), ("model", 4))
     plan = plan_remesh(cfg, mesh)
     assert plan.n_devices == 16
     # embedding table row-sharded over model, fsdp over data
