@@ -71,6 +71,91 @@ def throughput(batch_size: int = 4096, n_batches: int = 12,
     return res
 
 
+class _LenModel:
+    """Trivial deterministic Model Engine (class = F9 pkt_len mod 7) so the
+    pipes sweep times the sharded data plane + merge, not DNN FLOPs."""
+
+    num_classes = 7
+
+    def infer(self, payload):
+        return (payload[:, -1, 0] % self.num_classes).astype(jnp.int32)
+
+
+def _balanced_stream(num_pipes: int, per_pipe: int, seed: int) -> Dict:
+    """Synthetic packet stream with exactly ``per_pipe`` packets per pipe.
+
+    Random 5-tuples are generated with ~50% headroom, then trimmed so every
+    pipeline owns exactly ``per_pipe`` packets (ECMP-balanced ingress) —
+    the sweep measures the steady-state sharded scan, not skew tails.
+    """
+    from repro.core.data_engine.state import (EngineConfig, hash_five_tuple,
+                                              make_packets, pipe_of_hash)
+    import jax.numpy as _jnp
+
+    rng = np.random.default_rng(seed)
+    n = num_pipes * per_pipe
+    over = n + n // 2 + 4096
+    pk = make_packets(rng, over)
+    pk["ts_us"] = np.sort(rng.integers(0, n * 10, over)).astype(np.int32)
+    h = np.asarray(hash_five_tuple(
+        _jnp.asarray(pk["src_ip"]), _jnp.asarray(pk["dst_ip"]),
+        _jnp.asarray(pk["src_port"]), _jnp.asarray(pk["dst_port"]),
+        _jnp.asarray(pk["proto"])))
+    pipe = pipe_of_hash(h, EngineConfig(), num_pipes)
+    keep = np.zeros(over, bool)
+    for p in range(num_pipes):
+        mine = np.flatnonzero(pipe == p)
+        if len(mine) < per_pipe:
+            raise ValueError("headroom too small for balanced trim")
+        keep[mine[:per_pipe]] = True
+    return {k: v[keep] for k, v in pk.items()}
+
+
+def pipes_sweep(batch_sizes=(4096, 8192), pipes=(1, 2, 4),
+                n_steps: int = 8, seed: int = 0) -> List[Dict]:
+    """Multi-pipeline throughput: pps at num_pipes x per-pipe batch size.
+
+    Each pipeline ingests ``batch_size`` packets per step (its own line
+    rate), so a P-pipe run pushes P x batch_size x n_steps packets through
+    the sharded ``run_trace`` driver; ``num_pipes=1`` is the unsharded
+    device driver the acceptance bar compares against.  One warm run
+    compiles, a second (after ``reset()``) is timed.
+    """
+    import time as _time
+
+    from repro.core.data_engine.state import EngineConfig
+    from repro.core.fenix import FenixConfig, FenixSystem
+    from repro.core.model_engine.vector_io import IOConfig
+
+    rows: List[Dict] = []
+    for bs in batch_sizes:
+        base_pps = None
+        for p in pipes:
+            n = p * bs * n_steps
+            pk = _balanced_stream(p, bs * n_steps, seed)
+            sys_ = FenixSystem(
+                FenixConfig(engine=EngineConfig(),
+                            io=IOConfig(serve_max=128),
+                            batch_size=bs, control_plane_every=10**9,
+                            num_pipes=p), _LenModel())
+            sys_.run_trace(pk)                     # compile + warm
+            sys_.reset()
+            t0 = _time.perf_counter()
+            sys_.run_trace(pk)
+            dt = _time.perf_counter() - t0
+            row = {"num_pipes": p, "batch_size": bs, "packets": n,
+                   "pps": n / dt, "wall_s": round(dt, 3),
+                   "devices": min(p, len(__import__("jax").devices())),
+                   "sharded": sys_._mesh is not None}
+            if base_pps is None:        # first pipe count is the baseline
+                base_pps, base_p = row["pps"], p
+            row["baseline_pipes"] = base_p
+            row["speedup_vs_1pipe"] = row["pps"] / base_pps
+            rows.append(row)
+            print(row, flush=True)
+    return rows
+
+
 def train_model(seed=0, steps=300, n_flows=400):
     flows = make_flows("iscx", n_flows, seed=seed, min_per_class=20)
     x, y, _ = windows_from_flows(flows)

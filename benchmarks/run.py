@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo convention; full
 JSON artifacts land in benchmarks/results/.
 
   throughput   — data-plane pps at batch 4096 (segment vs seed dense path)
+  pipes        — multi-pipeline pps sweep (num_pipes x batch, ISSUE 2)
   accuracy     — Table 2 (macro-F1, 9 schemes x 2 tasks)
   resource     — Tables 3+4 (SRAM/VMEM/MAC proxies)
   scalability  — Figure 10 (F1 vs concurrency/throughput)
@@ -55,6 +56,21 @@ def main() -> None:
         _row("fastpath_throughput", res["segment"]["us_per_batch"],
              f"pps={res['segment']['pps']:.0f};"
              f"speedup_vs_dense={res['speedup_vs_dense']:.1f}x")
+
+    if want("pipes"):
+        from benchmarks import bench_scalability
+        sizes = (4096,) if args.fast else (4096, 8192)
+        steps = 4 if args.fast else 8
+        rows = bench_scalability.pipes_sweep(batch_sizes=sizes,
+                                             n_steps=steps)
+        with open(os.path.join(RESULTS, "pipes.json"), "w") as f:
+            json.dump({"rows": rows}, f, indent=1)
+        for r in rows:
+            _row(f"pipes_p{r['num_pipes']}_b{r['batch_size']}",
+                 r["wall_s"] * 1e6 / max(r["packets"] // r["batch_size"], 1),
+                 f"pps={r['pps']:.0f};"
+                 f"speedup_vs_1pipe={r['speedup_vs_1pipe']:.2f}x;"
+                 f"sharded={r['sharded']}")
 
     if want("accuracy"):
         from benchmarks import bench_accuracy

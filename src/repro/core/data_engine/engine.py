@@ -7,6 +7,14 @@ each scan step.  ``process_batch_fast`` is the vectorized throughput mode
 used by the Tbps-scale simulator: identical flow/ring/probability semantics,
 token-bucket admission approximated by a prefix-sum credit check (documented
 deviation; validated against the scan mode in tests).
+
+Both are *per-shard pure functions*: every table, bucket, and PRNG they
+touch lives in the state dict they are handed.  The multi-pipeline data
+plane exploits this directly — ``shard_map`` (or ``process_pipes_fast``'s
+vmap) runs ``process_batch_fast`` once per pipe against that pipe's slice
+of the stacked state, with the *local* ``EngineConfig``
+(``local_engine_config``: 1/P of the slot space, 1/P of the token rate) and
+zero cross-pipe communication.
 """
 
 from __future__ import annotations
@@ -153,6 +161,19 @@ def process_batch_fast(state: Dict, packets: Dict, cfg: EngineConfig
                                 state["cls"][slot], -1),
            "is_new": is_new}
     return state, out
+
+
+@functools.partial(jax.jit, static_argnames=("local_cfg",))
+def process_pipes_fast(states: Dict, packets: Dict,
+                       local_cfg: EngineConfig) -> Tuple[Dict, Dict]:
+    """Vectorized admission across pipes: states/packets carry a leading
+    [num_pipes] dim, each pipe running ``process_batch_fast`` on its own
+    table, bucket, and PRNG stream.  The mesh-sharded driver in ``fenix.py``
+    wraps the same per-pipe function in ``shard_map``; this vmap form is the
+    1-device fallback and the unit-testable reference for it.
+    """
+    return jax.vmap(lambda st, pk: process_batch_fast(st, pk, local_cfg)
+                    )(states, packets)
 
 
 def _first_occurrence(slot: jax.Array, n_slots: int) -> jax.Array:

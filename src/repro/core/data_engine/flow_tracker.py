@@ -64,6 +64,17 @@ def window_reset(state: Dict, cfg: EngineConfig, now: jax.Array) -> Dict:
     return s
 
 
+def window_reset_pipes(state: Dict, cfg: EngineConfig) -> Dict:
+    """T_w rollover for a stacked [num_pipes, ...] state: each pipe's flow
+    counter and packet counter restart, anchored at that pipe's own clock
+    (``t_last`` differs across pipes — each pipeline sees only its ports)."""
+    s = dict(state)
+    s["flow_cnt"] = jnp.zeros_like(state["flow_cnt"])
+    s["win_pkt_cnt"] = jnp.zeros_like(state["win_pkt_cnt"])
+    s["win_start"] = state["t_last"].astype(I32)
+    return s
+
+
 def apply_inference_result(state: Dict, slot, cls, h) -> Dict:
     """Model Engine verdict returns to the switch (§5.1): write cls if the
     slot still belongs to the same flow (hash check handles eviction races).

@@ -4,6 +4,13 @@ Integer-only data-plane math: the probability comes from the control-plane
 LUT (power-of-two binning => shift + clip), randomness is a 16-bit draw, the
 bucket holds microseconds of credit (cost = 1/V us per grant, cap = queue
 length * cost so bursts are absorbed without overflowing the queue).
+
+``step`` and the fast-path admission in ``engine.py`` are per-shard pure
+functions: all bucket/backlog state they touch lives in the state dict they
+are handed, so under the multi-pipeline layout each pipe runs them against
+its *local* bucket (refilled at ``rate / num_pipes`` via
+``local_engine_config``) with no cross-pipe coupling.  The control plane
+rebuilds one LUT per pipe from that pipe's own (N, Q) window statistics.
 """
 
 from __future__ import annotations
@@ -58,13 +65,38 @@ def control_plane_update(state: Dict, cfg: EngineConfig) -> Dict:
     This is the paper's 300-line control-plane Python component: it reads
     Flow_cnt / Pkt_cnt from the switch each T_w and pushes a fresh table.
     """
-    import numpy as np
+    s = dict(state)
+    s["lut"] = jnp.asarray(_lut_from_window(state["flow_cnt"],
+                                            state["win_pkt_cnt"], cfg), I32)
+    return s
 
+
+def _lut_from_window(flow_cnt, win_pkt_cnt, cfg: EngineConfig):
+    """One window's (N, Q) clamping + LUT build — the single formula site
+    shared by the single-pipe and per-pipe control planes."""
     from repro.core.probability import build_lut
 
-    n = max(float(state["flow_cnt"]), 1.0)
-    q = max(float(state["win_pkt_cnt"]), 1.0) / max(float(cfg.window_us), 1.0)
-    lut = build_lut(n=n, q=q, v=cfg.token_rate_per_us, cfg=cfg.lut)
+    n = max(float(flow_cnt), 1.0)
+    q = max(float(win_pkt_cnt), 1.0) / max(float(cfg.window_us), 1.0)
+    return build_lut(n=n, q=q, v=cfg.token_rate_per_us, cfg=cfg.lut)
+
+
+def control_plane_update_pipes(state: Dict, local_cfg: EngineConfig,
+                               num_pipes: int) -> Dict:
+    """Per-pipe LUT rebuild over a stacked [num_pipes, ...] state.
+
+    Each pipe gets its own table from its own window statistics and its own
+    rate share (``local_cfg.token_rate_per_us`` is already the per-pipe V);
+    pipe 0 of a one-pipe layout reproduces ``control_plane_update`` exactly.
+    This is the single host sync per control-plane window — one
+    device->host read of the [num_pipes] counters, one LUT push back.
+    """
+    import numpy as np
+
+    flow_cnt = np.asarray(state["flow_cnt"], np.int64)
+    win_pkt = np.asarray(state["win_pkt_cnt"], np.int64)
+    luts = [_lut_from_window(flow_cnt[p], win_pkt[p], local_cfg)
+            for p in range(num_pipes)]
     s = dict(state)
-    s["lut"] = jnp.asarray(lut, I32)
+    s["lut"] = jnp.asarray(np.stack(luts), I32)
     return s

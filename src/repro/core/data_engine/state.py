@@ -6,6 +6,19 @@ ring buffers (§4.3); token bucket + windowed global statistics (§4.2).
 
 All fields are integers — the data plane performs no float math, matching
 PISA's instruction set.  Timestamps are int32 microseconds.
+
+Multi-pipeline layout: a Tofino runs 2-4 independent ingress pipelines, each
+with its own register file and its own share of line rate.  ``num_pipes``
+partitions the *global* slot space by range: a flow's global slot
+``s = hash & (n_slots - 1)`` splits into high bits (the owning pipe,
+``pipe_of_hash``) and low bits (the slot inside that pipe's table,
+``local_engine_config`` shrinks ``n_slots_log2`` accordingly).  Two flows
+collide in the P-pipe layout iff they collide in the single-pipe table, so
+there is no cross-pipe flow aliasing and the collision structure is
+preserved exactly.  Each pipe's token bucket runs at ``rate / num_pipes``
+(its share of the one FPGA Model Engine), and ``init_pipes_state`` stacks
+per-pipe copies of the single-pipe state along a leading "pipe" axis —
+the layout ``shard_map`` shards over the mesh.
 """
 
 from __future__ import annotations
@@ -95,6 +108,61 @@ def init_state(cfg: EngineConfig, n_est: float = 1000.0,
         "denied_tokens": jnp.asarray(0, I32),
         "collisions": jnp.asarray(0, I32),
     }
+
+
+def local_engine_config(cfg: EngineConfig, num_pipes: int) -> EngineConfig:
+    """The per-pipeline view of a global ``EngineConfig``.
+
+    Slot-range partitioning: each pipe owns ``n_slots / num_pipes`` table
+    entries, addressed by the low bits of the global slot (so the per-pipe
+    ``process_batch_fast`` computes exactly the right local slot from the
+    hash).  The Model-Engine service rate and the switch<->FPGA channel are
+    shared resources, so each pipe's token bucket refills at ``1/num_pipes``
+    of the global rate — the per-pipeline line-rate share.  ``num_pipes=1``
+    returns a config equal to ``cfg`` (the single-pipe path is unchanged).
+    """
+    if num_pipes < 1 or num_pipes & (num_pipes - 1):
+        raise ValueError(f"num_pipes must be a power of two, got {num_pipes}")
+    p_log2 = num_pipes.bit_length() - 1
+    if p_log2 > cfg.n_slots_log2:
+        raise ValueError(f"num_pipes={num_pipes} exceeds n_slots="
+                         f"{cfg.n_slots}")
+    return dataclasses.replace(
+        cfg, n_slots_log2=cfg.n_slots_log2 - p_log2,
+        fpga_hz=cfg.fpga_hz / num_pipes,
+        link_bw_bytes=cfg.link_bw_bytes / num_pipes)
+
+
+def pipe_of_hash(h, cfg: EngineConfig, num_pipes: int):
+    """Owning pipeline of a flow: the high bits of its global table slot.
+
+    Works on np or jnp uint32 arrays; the complementary low bits are the
+    slot the pipe-local engine derives itself (``h & (local_n_slots - 1)``).
+    """
+    p_log2 = num_pipes.bit_length() - 1
+    gslot = h & np.uint32(cfg.n_slots - 1)
+    return (gslot >> np.uint32(cfg.n_slots_log2 - p_log2)).astype(np.int32) \
+        if isinstance(gslot, np.ndarray) else \
+        (gslot >> jnp.uint32(cfg.n_slots_log2 - p_log2)).astype(I32)
+
+
+def init_pipes_state(cfg: EngineConfig, num_pipes: int,
+                     n_est: float = 1000.0, q_est_pps: float = 1e6
+                     ) -> Dict[str, jax.Array]:
+    """Stacked per-pipe state: every field gains a leading [num_pipes] dim.
+
+    Each pipe is an independent ``init_state`` of the *local* config (its
+    slot range, its rate share, its share of the flow/packet estimates);
+    pipe p seeds its own PRNG stream with ``PRNGKey(p)`` so pipe 0 of a
+    one-pipe layout is bit-identical to the single-pipe state.
+    """
+    lcfg = local_engine_config(cfg, num_pipes)
+    one = init_state(lcfg, n_est=n_est / num_pipes,
+                     q_est_pps=q_est_pps / num_pipes)
+    stacked = {k: jnp.stack([one[k]] * num_pipes) for k in one}
+    stacked["rng_key"] = jnp.stack(
+        [jax.random.PRNGKey(p) for p in range(num_pipes)])
+    return stacked
 
 
 def hash_five_tuple(src_ip, dst_ip, src_port, dst_port, proto):

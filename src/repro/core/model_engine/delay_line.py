@@ -97,6 +97,40 @@ def deliver(state: Dict, dl: Dict, now: jax.Array,
     return new_state, out
 
 
+def init_pipes(capacity: int, num_pipes: int) -> Dict[str, jax.Array]:
+    """Per-pipe delay lines: every field gains a leading [num_pipes] dim.
+
+    Each pipeline has its own switch<->FPGA return path, so in-flight
+    results live with their owning pipe — delivery never crosses pipes.
+    """
+    one = init(capacity)
+    return {k: jnp.stack([one[k]] * num_pipes) for k in one}
+
+
+def push_pipes(dls: Dict, deliver_ts: jax.Array, slots: jax.Array,
+               hashes: jax.Array, cls: jax.Array,
+               counts: jax.Array) -> Dict:
+    """Scatter one Model-Engine result batch back to the owning pipes.
+
+    ``slots/hashes/cls`` keep the [pipe, lane] layout of ``dequeue_pipes``
+    and ``deliver_ts``/``counts`` are per-pipe, so this is a vmapped
+    ``push`` — no all-gather: each pipe's results land only in its own
+    delay line.
+    """
+    return jax.vmap(push)(dls, deliver_ts, slots, hashes, cls, counts)
+
+
+def deliver_pipes(states: Dict, dls: Dict, now: jax.Array,
+                  local_n_slots: int) -> Tuple[Dict, Dict]:
+    """Per-pipe delivery into per-pipe flow tables (vmapped ``deliver``).
+
+    ``now`` is each pipe's own clock — pipelines advance through their own
+    traffic independently.
+    """
+    return jax.vmap(lambda st, d, t: deliver(st, d, t, local_n_slots)
+                    )(states, dls, now)
+
+
 def to_list(dl: Dict) -> list:
     """Drain to the host-side list format (interop with the legacy path)."""
     import numpy as np

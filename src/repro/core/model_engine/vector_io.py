@@ -14,6 +14,16 @@ Two interchangeable implementations share the queue-state dict:
   versions with identical FIFO/drop semantics, usable inside ``lax.scan``
   (the Tbps trace driver).  Dequeue returns fixed-shape lanes
   (``serve_max``) plus a count so downstream shapes stay static.
+
+Multi-pipeline merge: with ``num_pipes`` switch pipelines feeding one FPGA
+Model Engine, each pipe keeps its *own* FIFO (enqueue stays pipe-local,
+inside the shard), and the single service budget is split across the pipes'
+rings by ``pipe_shares`` — an occupancy-weighted round-robin built from
+static ``lax`` ops (proportional base share + pipe-ordered waterfall for
+the integer remainder).  ``dequeue_pipes`` then drains each ring by its
+share; the dequeued lanes keep their [pipe, lane] layout, so inference
+results scatter straight back to the owning pipe's delay line with no
+all-gather of ring contents.
 """
 
 from __future__ import annotations
@@ -130,6 +140,62 @@ def service_budget(span_us, rate_per_us: float, cap: int) -> jax.Array:
     b = jnp.floor(jnp.asarray(span_us).astype(jnp.float32)
                   * jnp.float32(rate_per_us))
     return jnp.clip(b, 1, cap).astype(I32)
+
+
+def step_budget(ts_first, ts_last, rate_per_us: float, cap: int) -> jax.Array:
+    """Service budget for one step spanning [ts_first, ts_last].
+
+    The span->budget composition used (identically) by the host loop, the
+    device scan, and the multi-pipe driver — one call site for the float32
+    formula so every path agrees bit-for-bit.
+    """
+    span = jnp.maximum(jnp.asarray(ts_last).astype(I32)
+                       - jnp.asarray(ts_first).astype(I32), 1)
+    return service_budget(span, rate_per_us, cap)
+
+
+def init_pipes_queues(cfg: IOConfig, num_pipes: int) -> Dict[str, jax.Array]:
+    """Per-pipe FIFOs: every queue field gains a leading [num_pipes] dim."""
+    one = init_queues(cfg)
+    return {k: jnp.stack([one[k]] * num_pipes) for k in one}
+
+
+def pipe_shares(occ: jax.Array, budget: jax.Array) -> jax.Array:
+    """Split one Model-Engine ``budget`` across pipes by ring occupancy.
+
+    Occupancy-weighted round-robin with static ops only: every pipe first
+    gets ``floor(budget * occ_p / sum(occ))`` (capped at its occupancy),
+    then the integer remainder waterfalls through the pipes in index order
+    until it is spent.  Guarantees ``share_p <= occ_p`` and
+    ``sum(share) == min(budget, sum(occ))``; a single pipe degenerates to
+    ``min(budget, occ)`` — the single-pipe dequeue take.
+    """
+    occ = jnp.maximum(occ.astype(I32), 0)
+    budget = budget.astype(I32)
+    total = jnp.sum(occ)
+    # budget*occ reaches num_pipes*queue_len^2 — widen so large queue_len
+    # configs cannot wrap int32 into negative shares
+    base = jnp.minimum((budget.astype(jnp.int64) * occ.astype(jnp.int64)
+                        // jnp.maximum(total, 1).astype(jnp.int64)
+                        ).astype(I32), occ)
+    leftover = jnp.maximum(budget - jnp.sum(base), 0)
+    room = occ - base
+    before = jnp.cumsum(room) - room          # room in earlier pipes
+    extra = jnp.clip(leftover - before, 0, room)
+    return base + extra
+
+
+def dequeue_pipes(q: Dict, cfg: IOConfig, shares: jax.Array
+                  ) -> Tuple[Dict, jax.Array, jax.Array, jax.Array,
+                             jax.Array]:
+    """Drain each pipe's ring by its share (vmapped ``dequeue_device``).
+
+    Returns (q', slots[P, lanes], hashes[P, lanes], feats[P, lanes, ...],
+    counts[P]); the [pipe, lane] layout keys results back to the owning
+    pipe without gathering ring contents across pipes.
+    """
+    return jax.vmap(lambda qp, s: dequeue_device(qp, cfg, s),
+                    in_axes=(0, 0))(q, shares)
 
 
 def enqueue_device(q: Dict, cfg: IOConfig, valid: jax.Array,

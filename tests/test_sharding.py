@@ -1,7 +1,17 @@
-"""Sharding rules, divisibility fallbacks, pspec generation (AbstractMesh —
-no devices needed; the compile-level proof is launch/dryrun.py)."""
+"""Sharding rules, divisibility fallbacks, pspec generation, pipe meshes.
+
+The rule-logic tests run on ``AbstractMesh``es whose axis sizes derive from
+the *live* device count (scaled up to a floor of 16 and clamped so the
+divisibility assertions stay meaningful) — no hard-coded mesh, so the same
+file passes under the 1-device and the 4-virtual-device
+(``--xla_force_host_platform_device_count=4``) CI entries.  The pipe-mesh
+tests build a real ``Mesh`` over whatever devices are actually up and prove
+the sharded Data-Engine path against its vmap reference.
+"""
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
@@ -12,30 +22,42 @@ from repro.models.param import (DEFAULT_RULES, sharding_ctx, spec_for,
 
 from conftest import abstract_mesh
 
-MESH1 = abstract_mesh(("data", 16), ("model", 16))
-MESH2 = abstract_mesh(("pod", 2), ("data", 16), ("model", 16))
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 1).bit_length()
+
+
+# abstract axis size from the live device count: >= 16 so non-divisible
+# shapes exist, <= 64 so the model shapes below still shard
+N_DEV = jax.device_count()
+AXIS = min(max(16, _next_pow2(N_DEV)), 64)
+MESH1 = abstract_mesh(("data", AXIS), ("model", AXIS))
+MESH2 = abstract_mesh(("pod", 2), ("data", AXIS), ("model", AXIS))
 
 
 def test_spec_divisibility_fallback():
     with sharding_ctx(MESH1):
-        # 40 heads not divisible by model=16 -> replicated
-        spec = spec_for((5120, 40, 128), ("embed", "heads", "head_dim"))
+        # AXIS*5/2 heads leave a remainder of AXIS/2 -> replicated
+        bad = AXIS * 5 // 2
+        spec = spec_for((5120, bad, 128), ("embed", "heads", "head_dim"))
         assert spec == P("data", None, None)
         # divisible heads shard
-        spec = spec_for((5120, 32, 128), ("embed", "heads", "head_dim"))
+        spec = spec_for((5120, 2 * AXIS, 128), ("embed", "heads",
+                                                "head_dim"))
         assert spec == P("data", "model", None)
 
 
 def test_spec_axis_used_once():
     with sharding_ctx(MESH2):
         # batch takes (pod,data); a second 'embed'->(pod,data) must drop
-        spec = spec_for((256, 4096, 5120), ("batch", "seq", "embed"))
+        spec = spec_for((8 * 2 * AXIS, 4096, 5120), ("batch", "seq",
+                                                     "embed"))
         assert spec == P(("pod", "data"), None, None)
 
 
 def test_pod_axis_filtered_on_single_pod():
     with sharding_ctx(MESH1):
-        spec = spec_for((256, 4096), ("batch", "seq"))
+        spec = spec_for((16 * AXIS, 4096), ("batch", "seq"))
         assert spec == P("data", None)
 
 
@@ -77,3 +99,58 @@ def test_quantized_params_keep_specs():
     with sharding_ctx(MESH1):
         specs = tree_pspecs(qp, qa, MESH1)
     assert set(specs) == set(qp)
+
+
+# -- live pipe mesh (real devices, not abstract) ------------------------------
+
+def test_pipe_mesh_from_live_devices():
+    """The data-plane mesh is built from whatever devices are up."""
+    from repro.core.fenix import pipe_mesh
+
+    mesh = pipe_mesh(N_DEV)
+    assert mesh is not None and mesh.shape == {"pipe": N_DEV}
+    # more pipes than devices -> vmap fallback, not an error
+    assert pipe_mesh(2 * _next_pow2(N_DEV)) is None
+
+
+def test_pipe_sharded_engine_matches_vmap():
+    """shard_map over the live mesh == process_pipes_fast (vmap) on the
+    per-pipe Data Engine — whatever the CI device count is."""
+    try:
+        from jax import shard_map  # type: ignore[attr-defined]
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+    from repro.core.data_engine import engine as de
+    from repro.core.data_engine.state import (EngineConfig,
+                                              init_pipes_state,
+                                              local_engine_config,
+                                              make_packets)
+    from repro.core.fenix import pipe_mesh
+
+    # largest power of two <= the live device count, so the mesh always fits
+    # (3-GPU boxes, odd virtual-device counts, ...)
+    num_pipes = 1 << (N_DEV.bit_length() - 1)
+    mesh = pipe_mesh(num_pipes)
+    assert mesh is not None
+    cfg = EngineConfig(n_slots_log2=8)
+    lcfg = local_engine_config(cfg, num_pipes)
+    rng = np.random.default_rng(0)
+    per_pipe = [make_packets(rng, 128) for _ in range(num_pipes)]
+    batches = {k: jnp.stack([jnp.asarray(b[k]) for b in per_pipe])
+               for k in per_pipe[0]}
+    states = init_pipes_state(cfg, num_pipes)
+
+    def shard_body(st, pk):
+        st, out = de.process_batch_fast(
+            *jax.tree.map(lambda x: x[0], (st, pk)), lcfg)
+        return jax.tree.map(lambda x: jnp.asarray(x)[None], (st, out))
+
+    sharded = jax.jit(shard_map(shard_body, mesh=mesh, in_specs=P("pipe"),
+                                out_specs=P("pipe")))
+    st_s, out_s = sharded(states, batches)
+    st_v, out_v = de.process_pipes_fast(states, batches, lcfg)
+    for k in st_v:
+        np.testing.assert_array_equal(np.asarray(st_s[k]),
+                                      np.asarray(st_v[k]), err_msg=k)
+    np.testing.assert_array_equal(np.asarray(out_s["granted"]),
+                                  np.asarray(out_v["granted"]))
