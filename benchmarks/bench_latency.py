@@ -52,10 +52,26 @@ def main(out_path: str = None) -> Dict:
             r = model.infer(batch)
         jax.block_until_ready(r)
         cpu_us = (time.time() - t0) / reps / batch.shape[0] * 1e6
+        # engine-farm service: the same 128-window batch split across E
+        # engines (cycle model) and the fused multi-engine inference pass
+        # (one infer_engines call serving every engine's lanes at once)
+        farm_batch = jnp.asarray(x[:128]).reshape(4, 32, *x.shape[1:])
+        fused = model.infer_engines(farm_batch)
+        np.testing.assert_array_equal(np.asarray(fused).reshape(-1),
+                                      np.asarray(model.infer(batch)))
+        t0 = time.time()
+        for _ in range(reps):
+            r = model.infer_engines(farm_batch)
+        jax.block_until_ready(r)
+        fused_us = (time.time() - t0) / reps / batch.shape[0] * 1e6
         out[cfg.name] = {
             "macs_per_window": macs_per_inference(cfg),
             "fpga_cycle_model_us": cm.latency_us(cfg),
             "fpga_throughput_inf_s": cm.throughput_inf_per_s(cfg),
+            "farm_batch128_us": {
+                e: cm.farm_batch_latency_us(cfg, 128, e)
+                for e in (1, 2, 4)},
+            "farm4_fused_cpu_us_per_inf": fused_us,
             "tpu_roofline": tpu_latency_us(cfg, batch=128),
             "cpu_measured_us_per_inf": cpu_us,
             "speedup_vs_control_plane":

@@ -156,6 +156,101 @@ def pipes_sweep(batch_sizes=(4096, 8192), pipes=(1, 2, 4),
     return rows
 
 
+def engines_sweep(engines=(1, 2, 4), batch_size: int = 64,
+                  n_steps: int = 512, n_flows: int = 256,
+                  oversub: float = 8.0, seed: int = 0) -> List[Dict]:
+    """Model-Engine farm scale-out: served inferences/s at E engines.
+
+    The stream oversubscribes one engine ``oversub``-fold and the
+    admission gate is saturated (P=1 LUT via ``n_est=q_est=0``), so the
+    token bucket holds the switch at exactly the farm's pooled service
+    rate and the measurement is service-bound: served inferences per
+    *simulated* second should scale linearly in E.  ``batch_size`` stays
+    at/below ``EngineConfig.queue_len`` so the fast-path bucket is exact
+    across batches (no within-batch credit wall).  ROADMAP success bar:
+    E=2 >= 1.7x E=1; results land in benchmarks/results/engines.json.
+    """
+    import time as _time
+
+    from repro.core.data_engine.state import EngineConfig
+    from repro.core.fenix import FenixConfig, FenixSystem
+    from repro.core.model_engine.inference import CycleModel
+    from repro.core.model_engine.vector_io import IOConfig
+    from repro.configs.fenix_models import fenix_cnn
+
+    from repro.data.synthetic_traffic import uniform_flow_stream
+
+    n = batch_size * n_steps
+    pk = uniform_flow_stream(n, n_flows, seed=seed)
+    span_us = max(int(pk["ts_us"][-1] - pk["ts_us"][0]), 1)
+    offered_pps = n / (span_us / 1e6)
+    fpga_hz = offered_pps / max(oversub, 1e-6)   # single-engine V
+    cyc = CycleModel()
+    rows: List[Dict] = []
+    base_rate = None
+    for e in engines:
+        sys_ = FenixSystem(FenixConfig(
+            engine=EngineConfig(fpga_hz=fpga_hz),
+            io=IOConfig(queue_len=256),
+            batch_size=batch_size, control_plane_every=10**9,
+            num_engines=e, farm_path=True), _LenModel(),
+            n_est=0.0, q_est_pps=0.0)
+        sys_.run_trace(pk)                     # compile + warm
+        sys_.reset()
+        t0 = _time.perf_counter()
+        sys_.run_trace(pk)
+        dt = _time.perf_counter() - t0
+        served = sys_.stats["inferences"]
+        rate = served / (span_us / 1e6)
+        if base_rate is None:       # first engine count is the baseline
+            base_rate, base_e = max(rate, 1e-9), e
+        row = {"num_engines": e, "packets": n, "offered_pps": offered_pps,
+               "oversub": oversub, "served": served,
+               "served_inf_per_s": rate,
+               "baseline_engines": base_e,
+               "speedup_vs_1eng": rate / base_rate,
+               "served_per_engine": sys_.stats["served_per_engine"],
+               "granted": sys_.stats["granted"],
+               "dropped_eq": sys_.stats["dropped_eq"],
+               "engine_q_depth_hist": sys_.stats["engine_q_depth_hist"],
+               "pps_wall": n / dt, "wall_s": round(dt, 3),
+               "sharded": sys_._mesh is not None,
+               # cycle-model crosscheck: modelled aggregate service rate
+               "cycle_model_inf_per_s":
+                   cyc.farm_throughput_inf_per_s(fenix_cnn(7), e)}
+        rows.append(row)
+        print(row, flush=True)
+    return rows
+
+
+def oversub_sweep(batch_size: int = 8192,
+                  oversubs=(0.5, 4.0, 16.0, 64.0), n_flows: int = 1000,
+                  pkts: int = 60_000, train_steps: int = 300,
+                  train_flows: int = 400, seed: int = 1) -> Dict:
+    """Figure-10 analogue at batch 8192 (ROADMAP item).
+
+    Sweeps offered load past the Model Engine's service capacity with the
+    segment admission path and the trained INT8 model: tracks macro-F1 of
+    DNN-classified flows, grant fraction, and data-plane pps at each
+    oversubscription factor.  The paper's observation — a graceful
+    relative F1 drop as rate-limited sampling gives each flow fewer and
+    staler windows — is the mechanism measured here, now at the 8192
+    device-path batch size.
+    """
+    cfg, qp = train_model(seed=0, steps=train_steps, n_flows=train_flows)
+    rows: List[Dict] = []
+    for o in oversubs:
+        t0 = time.time()
+        r = run_scale(cfg, qp, n_flows, pkts=pkts, seed=seed, oversub=o,
+                      batch_size=batch_size)
+        r["wall_s"] = round(time.time() - t0, 1)
+        rows.append(r)
+        print(r, flush=True)
+    f1_0 = max(rows[0]["macro_f1"], 1e-9)
+    return {"batch_size": batch_size, "rows": rows,
+            "rel_f1_drop": (f1_0 - rows[-1]["macro_f1"]) / f1_0}
+
+
 def train_model(seed=0, steps=300, n_flows=400):
     flows = make_flows("iscx", n_flows, seed=seed, min_per_class=20)
     x, y, _ = windows_from_flows(flows)
@@ -172,7 +267,8 @@ def train_model(seed=0, steps=300, n_flows=400):
 
 
 def run_scale(cfg, qp, n_flows: int, pkts: int = 60_000,
-              seed: int = 1, oversub: float = 1.0) -> Dict:
+              seed: int = 1, oversub: float = 1.0,
+              batch_size: int = 512) -> Dict:
     """oversub = aggregate packet rate / Model-Engine service rate V.
 
     This is Figure 10's x-axis: the paper pushes traffic past the FPGA's
@@ -188,20 +284,33 @@ def run_scale(cfg, qp, n_flows: int, pkts: int = 60_000,
     oracle = [np.stack([f.pkt_len, f.ipd_us], -1).astype(np.int32)
               for f in flows]
     model = EngineModel(cfg, qp)
+    # keep the control-plane cadence roughly constant in *simulated time*
+    # across batch sizes (the default 8 x 512-packet batches): large-batch
+    # runs would otherwise never rebuild the LUT from observed (N, Q) and
+    # the probability gate would stay on its initial estimates
+    cpe = max(1, round(8 * 512 / batch_size))
     sys_ = FenixSystem(FenixConfig(
         engine=EngineConfig(
             fpga_hz=fpga_hz,
             n_slots_log2=max(12, int(np.ceil(
                 np.log2(max(n_flows * 4, 2)))))),
+        batch_size=batch_size, control_plane_every=cpe,
         fast_mode=True), model, oracle_windows=oracle)
+    t0 = time.perf_counter()
     out = sys_.run_trace(stream)
+    wall_s = time.perf_counter() - t0
     # flow-level macro-F1 over flows that received a DNN verdict
     v = out["verdict"]
     ok = v >= 0
     labels = stream["label"]
     fidx = stream["flow_idx"]
     if ok.sum() == 0:
-        return {"n_flows": n_flows, "macro_f1": 0.0, "coverage": 0.0}
+        return {"n_flows": n_flows, "oversub": oversub, "macro_f1": 0.0,
+                "coverage": 0.0, "granted": sys_.stats["granted"],
+                "grant_frac": sys_.stats["granted"] / pkts,
+                "inferences": sys_.stats["inferences"],
+                "batch_size": batch_size, "offered_pps": pps,
+                "pps_wall": pkts / max(wall_s, 1e-9)}
     uf, votes = flow_vote(v[ok], fidx[ok])
     flow_labels = np.asarray([labels[fidx == f][0] for f in uf])
     f1 = macro_f1(flow_labels, votes, 7)
@@ -209,7 +318,9 @@ def run_scale(cfg, qp, n_flows: int, pkts: int = 60_000,
             "coverage": float(ok.mean()),
             "granted": sys_.stats["granted"],
             "grant_frac": sys_.stats["granted"] / pkts,
-            "inferences": sys_.stats["inferences"]}
+            "inferences": sys_.stats["inferences"],
+            "batch_size": batch_size, "offered_pps": pps,
+            "pps_wall": pkts / max(wall_s, 1e-9)}
 
 
 def main(out_path: str = None,

@@ -5,6 +5,10 @@ JSON artifacts land in benchmarks/results/.
 
   throughput   — data-plane pps at batch 4096 (segment vs seed dense path)
   pipes        — multi-pipeline pps sweep (num_pipes x batch, ISSUE 2)
+  engines      — Model-Engine farm sweep at E in {1,2,4} (ISSUE 3; bar:
+                 E=2 >= 1.7x served inferences/s over E=1 at saturation)
+  oversub      — Figure 10 analogue at batch 8192 (F1 + pps vs offered
+                 load past the Model-Engine service capacity)
   accuracy     — Table 2 (macro-F1, 9 schemes x 2 tasks)
   resource     — Tables 3+4 (SRAM/VMEM/MAC proxies)
   scalability  — Figure 10 (F1 vs concurrency/throughput)
@@ -12,7 +16,7 @@ JSON artifacts land in benchmarks/results/.
   fairness     — Appendix A (E[interval] == N/V)
   roofline     — §Roofline table from the dry-run artifacts (if present)
 
-``python -m benchmarks.run [--fast]``
+``python -m benchmarks.run [--fast] [--only section[,section...]]``
 """
 
 from __future__ import annotations
@@ -28,6 +32,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
+SECTIONS = ("throughput", "pipes", "engines", "oversub", "accuracy",
+            "resource", "scalability", "latency", "fairness", "roofline")
+
 
 def _row(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.2f},{derived}")
@@ -37,10 +44,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller accuracy/scalability settings")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(SECTIONS))
     args, _ = ap.parse_known_args()
     os.makedirs(RESULTS, exist_ok=True)
     only = args.only.split(",") if args.only else None
+    if only:
+        unknown = sorted(set(only) - set(SECTIONS))
+        if unknown:
+            ap.error(f"unknown --only section(s): {', '.join(unknown)}; "
+                     f"valid sections: {', '.join(SECTIONS)}")
 
     def want(name):
         return only is None or name in only
@@ -71,6 +84,37 @@ def main() -> None:
                  f"pps={r['pps']:.0f};"
                  f"speedup_vs_1pipe={r['speedup_vs_1pipe']:.2f}x;"
                  f"sharded={r['sharded']}")
+
+    if want("engines"):
+        from benchmarks import bench_scalability
+        steps = 192 if args.fast else 512
+        rows = bench_scalability.engines_sweep(engines=(1, 2, 4),
+                                               n_steps=steps)
+        with open(os.path.join(RESULTS, "engines.json"), "w") as f:
+            json.dump({"rows": rows}, f, indent=1)
+        for r in rows:
+            _row(f"engines_e{r['num_engines']}", r["wall_s"] * 1e6,
+                 f"served_per_s={r['served_inf_per_s']:.0f};"
+                 f"speedup_vs_1eng={r['speedup_vs_1eng']:.2f}x;"
+                 f"sharded={r['sharded']}")
+
+    if want("oversub"):
+        from benchmarks import bench_scalability
+        t0 = time.time()
+        if args.fast:
+            res = bench_scalability.oversub_sweep(
+                oversubs=(0.5, 16.0), n_flows=250, pkts=20_000,
+                train_steps=150, train_flows=250)
+        else:
+            res = bench_scalability.oversub_sweep()
+        with open(os.path.join(RESULTS, "oversub.json"), "w") as f:
+            json.dump(res, f, indent=1)
+        rows = res["rows"]
+        _row("oversub", (time.time() - t0) * 1e6,
+             f"f1_lo={rows[0]['macro_f1']:.3f};"
+             f"f1_hi={rows[-1]['macro_f1']:.3f};"
+             f"rel_drop={res['rel_f1_drop']:.3f};"
+             f"pps={rows[-1]['pps_wall']:.0f}")
 
     if want("accuracy"):
         from benchmarks import bench_accuracy

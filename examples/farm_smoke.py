@@ -1,0 +1,66 @@
+"""2-pipe x 2-engine Model-Engine farm smoke (CI, 8 virtual devices).
+
+Exercises the real 2-D (pipe x engine) ``shard_map`` path end-to-end:
+builds a small deterministic trace, runs it through
+``FenixConfig(num_pipes=2, num_engines=2)``, and asserts the farm
+invariants — the mesh was actually used, every verdict matches the
+nested-vmap fallback, service is accounted per engine, and the router
+never dropped a lane at engine ingress.
+
+Run on CPU with virtual devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/farm_smoke.py
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fenix import FenixConfig, FenixSystem
+from repro.data.synthetic_traffic import uniform_flow_stream
+
+
+class ByLenModel:
+    """Deterministic stand-in Model Engine: class = F9 pkt_len mod 7."""
+
+    num_classes = 7
+
+    def infer(self, payload):
+        return (payload[:, -1, 0] % self.num_classes).astype(jnp.int32)
+
+
+def main() -> None:
+    print(f"devices: {jax.device_count()}")
+    stream = uniform_flow_stream(2048, 48, gap_us=100)
+    mk = lambda: FenixSystem(
+        FenixConfig(batch_size=256, control_plane_every=4,
+                    num_pipes=2, num_engines=2), ByLenModel())
+
+    sys_mesh = mk()
+    assert sys_mesh._mesh is not None, (
+        "2-pipe x 2-engine farm needs >= 4 devices; set "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    assert sys_mesh._mesh.devices.shape == (2, 2)
+    assert sys_mesh._mesh.axis_names == ("pipe", "engine")
+    v_mesh = sys_mesh.run_trace(stream)["verdict"]
+
+    sys_vmap = mk()
+    sys_vmap._mesh = None                     # nested-vmap reference
+    v_vmap = sys_vmap.run_trace(stream)["verdict"]
+
+    np.testing.assert_array_equal(v_mesh, v_vmap)
+    assert sys_mesh.stats == sys_vmap.stats
+    st = sys_mesh.stats
+    assert st["inferences"] > 0
+    assert sum(st["served_per_engine"]) == st["inferences"]
+    assert min(st["served_per_engine"]) > 0   # both engines served
+    assert st["dropped_eq"] == 0              # capacity-aware router
+    print(f"verdicts classified: {(v_mesh >= 0).sum()}/{len(v_mesh)}")
+    print(f"served_per_engine: {st['served_per_engine']}")
+    print("2-pipe x 2-engine shard_map farm == vmap fallback: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -110,6 +110,24 @@ def init_state(cfg: EngineConfig, n_est: float = 1000.0,
     }
 
 
+def farm_engine_config(cfg: EngineConfig, num_engines: int) -> EngineConfig:
+    """The switch-side view of an ``num_engines``-strong Model-Engine farm.
+
+    ``cfg`` describes ONE FPGA engine; a farm of E engines multiplies the
+    aggregate service rate and the switch<->FPGA channel count by E, so the
+    switch's token bucket (admission) refills E times faster — the farm's
+    pooled capacity.  Per-engine service budgets in the farm step still use
+    the *single-engine* rate; their sum is this config's rate, so admission
+    and service stay balanced.  ``num_engines=1`` returns a config equal to
+    ``cfg`` (the single-engine paths are unchanged).
+    """
+    if num_engines < 1:
+        raise ValueError(f"num_engines must be >= 1, got {num_engines}")
+    return dataclasses.replace(
+        cfg, fpga_hz=cfg.fpga_hz * num_engines,
+        link_bw_bytes=cfg.link_bw_bytes * num_engines)
+
+
 def local_engine_config(cfg: EngineConfig, num_pipes: int) -> EngineConfig:
     """The per-pipeline view of a global ``EngineConfig``.
 

@@ -40,6 +40,19 @@ per-pipe delay lines — a scatter keyed by the owning pipe, no all-gather.
 ``pipes_path=True`` at ``num_pipes=1`` runs the sharded driver over a
 1-device mesh and is bit-identical to it (asserted in
 tests/test_multi_pipe.py).
+
+Engine-farm mode (``num_engines=E``): E FPGA Model Engines behind the one
+switch (§7 scale-out), sharded over an ``"engine"`` mesh axis orthogonal
+to ``"pipe"`` (2-D ``farm_mesh``, nested-vmap fallback below P*E
+devices).  Each engine owns an ingress FIFO and its own per-engine service
+budget; the pipes' dequeued lanes are routed to the least-loaded engine by
+free ingress space (``vio.engine_intake`` — the ``pipe_shares`` waterfall
+with engines as consumers), and verdicts return through the owning pipe's
+delay line tagged with the serving engine.  The switch's admission scales
+with the pooled capacity (``farm_engine_config``: token rate x E).
+``num_engines=1`` keeps the pipes/single drivers; forcing
+``farm_path=True`` at ``num_engines=1`` is bit-identical to the pipes
+driver (asserted in tests/test_engine_farm.py).
 """
 
 from __future__ import annotations
@@ -61,10 +74,12 @@ except ImportError:
 from repro.configs.fenix_models import TrafficModelConfig
 from repro.core.data_engine import engine as de
 from repro.core.data_engine import rate_limiter as rl
-from repro.core.data_engine.state import (EngineConfig, hash_five_tuple,
-                                          init_pipes_state, init_state,
-                                          local_engine_config, pipe_of_hash)
+from repro.core.data_engine.state import (EngineConfig, farm_engine_config,
+                                          hash_five_tuple, init_pipes_state,
+                                          init_state, local_engine_config,
+                                          pipe_of_hash)
 from repro.core.model_engine import delay_line as dl
+from repro.core.model_engine import engine_farm as farm
 from repro.core.model_engine import vector_io as vio
 from repro.core.model_engine.inference import EngineModel
 from repro.core.data_engine import flow_tracker as ft
@@ -91,6 +106,12 @@ class FenixConfig:
     # None: sharded driver iff num_pipes > 1.  True forces it at num_pipes=1
     # (bit-identical to the single-pipe driver; used by tests/benchmarks).
     pipes_path: Optional[bool] = None
+    # FPGA Model Engines behind the switch (§7 scale-out).  Each engine
+    # serves at the full per-engine rate; admission scales with the pool.
+    num_engines: int = 1
+    # None: farm driver iff num_engines > 1.  True forces it at
+    # num_engines=1 (bit-identical to the pipes driver; tests/benchmarks).
+    farm_path: Optional[bool] = None
 
 
 def pipe_mesh(num_pipes: int) -> Optional[Mesh]:
@@ -273,29 +294,55 @@ class FenixSystem:
 
     def __init__(self, cfg: FenixConfig, model: EngineModel,
                  tree: Optional[Dict] = None, tree_depth: int = 4,
-                 oracle_windows: Optional[List[np.ndarray]] = None):
+                 oracle_windows: Optional[List[np.ndarray]] = None,
+                 n_est: float = 1000.0, q_est_pps: float = 1e6):
         self.cfg = cfg
         self.model = model
         self.tree = tree
         self.tree_depth = tree_depth
         self.oracle = oracle_windows
-        # sharded driver iff requested (pipes_path=True forces it at P=1)
+        # initial control-plane estimates for the probability LUT (rebuilt
+        # from observed window stats at every T_w rollover); (0, 0) builds
+        # the saturated P=1 gate — admission limited only by the token
+        # bucket, which the oversubscription benchmarks use to hold the
+        # Model-Engine farm at exactly its service capacity
+        self.n_est = n_est
+        self.q_est_pps = q_est_pps
+        # farm driver iff requested (farm_path=True forces it at E=1)
+        self._use_farm = (cfg.farm_path if cfg.farm_path is not None
+                          else cfg.num_engines > 1)
+        if cfg.num_engines > 1 and not self._use_farm:
+            raise ValueError("num_engines > 1 requires the farm driver "
+                             "(farm_path must not be False)")
+        # sharded driver iff requested (pipes_path=True forces it at P=1);
+        # the farm rides on the pipes state layout, so it implies it
         self._use_pipes = (cfg.pipes_path if cfg.pipes_path is not None
-                           else cfg.num_pipes > 1)
-        self.lcfg = local_engine_config(cfg.engine, cfg.num_pipes)
-        self._mesh = pipe_mesh(cfg.num_pipes) if self._use_pipes else None
+                           else cfg.num_pipes > 1) or self._use_farm
+        # switch-side view of the engine pool: admission at E x one engine
+        self.gcfg = farm_engine_config(cfg.engine, cfg.num_engines)
+        self.lcfg = local_engine_config(self.gcfg, cfg.num_pipes)
+        if self._use_farm:
+            self._mesh = farm.farm_mesh(cfg.num_pipes, cfg.num_engines)
+        elif self._use_pipes:
+            self._mesh = pipe_mesh(cfg.num_pipes)
+        else:
+            self._mesh = None
         self._scan_jit = None
         self._step_jit = None
         self._pipe_scan_jit = None
         self._pipe_scan_masked_jit = None
         self._pipe_tail_jit = None
+        self._farm_scan_jit = None
+        self._farm_scan_masked_jit = None
+        self._farm_tail_jit = None
         self.reset()
 
     def reset(self) -> None:
         """Fresh run state (tables, queues, delay lines, stats); compiled
         step functions are kept, so repeated traces skip recompilation."""
         cfg = self.cfg
-        self.state = init_state(cfg.engine)
+        self.state = init_state(cfg.engine, n_est=self.n_est,
+                                q_est_pps=self.q_est_pps)
         self.queues = vio.init_queues(cfg.io)
         self.stats = {"packets": 0, "granted": 0, "inferences": 0,
                       "classified_pkts": 0, "tree_pkts": 0, "dropped_q": 0,
@@ -303,7 +350,20 @@ class FenixSystem:
                       # line (always 0 on the host path, whose in-flight
                       # list is unbounded; nonzero here flags that the
                       # device run diverged and io.queue_len needs raising)
-                      "dropped_inflight": 0}
+                      "dropped_inflight": 0,
+                      # engine-farm plumbing (single-engine paths keep the
+                      # degenerate E=1 values so stats dicts stay
+                      # comparable across drivers): inferences served by
+                      # each Model Engine, lanes dropped at engine ingress
+                      # (0 unless the router is broken — it is
+                      # capacity-aware), and per-engine log2 histograms of
+                      # post-service ingress queue depth, one sample per
+                      # batch round
+                      "served_per_engine": [0] * cfg.num_engines,
+                      "dropped_eq": 0,
+                      "engine_q_depth_hist": [[0] * farm.DEPTH_BUCKETS
+                                              for _ in
+                                              range(cfg.num_engines)]}
         # in-flight inference results, host view: (deliver_ts, slot, h, cls)
         self._inflight: List[Tuple[int, int, int, int]] = []
         # ... and the equivalent device-resident delay line
@@ -311,9 +371,20 @@ class FenixSystem:
         self._dl_dirty = False
         if self._use_pipes:
             # stacked [num_pipes, ...] switch state + per-pipe FIFOs/lines
-            self.pstate = init_pipes_state(cfg.engine, cfg.num_pipes)
+            # (admission from the pooled-engine view; E=1 degenerates to
+            # cfg.engine, so the pipes driver is untouched)
+            self.pstate = init_pipes_state(self.gcfg, cfg.num_pipes,
+                                           n_est=self.n_est,
+                                           q_est_pps=self.q_est_pps)
             self.pqueues = vio.init_pipes_queues(cfg.io, cfg.num_pipes)
-            self.pdl = dl.init_pipes(cfg.io.queue_len, cfg.num_pipes)
+            # a pipe can receive up to E engines' worth of results per
+            # step, so the farm scales the per-pipe delay line with E
+            self.pdl = dl.init_pipes(cfg.io.queue_len * cfg.num_engines,
+                                     cfg.num_pipes)
+        if self._use_farm:
+            # per-engine ingress FIFOs on the FPGA side of the interconnect
+            self.eq = vio.init_engine_queues(cfg.io, cfg.num_engines,
+                                             cfg.num_pipes)
 
     # -- one simulation step (host reference path) --------------------------
     def step(self, packets: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
@@ -322,8 +393,8 @@ class FenixSystem:
         if self._use_pipes:
             raise RuntimeError(
                 "step() drives the single-pipe host state, which the "
-                "sharded driver does not maintain; use run_trace() with "
-                "num_pipes>1 / pipes_path=True")
+                "sharded/farm drivers do not maintain; use run_trace() "
+                "with num_pipes>1 / pipes_path=True / num_engines>1")
         self._sync_inflight_to_host()
         n = len(packets["ts_us"])
         batch = {k: jnp.asarray(v) for k, v in packets.items()
@@ -368,6 +439,7 @@ class FenixSystem:
                 self._inflight.append((now + cfg.loop_latency_us,
                                        int(s2[i]), int(h2[i]), int(cls[i])))
             self.stats["inferences"] += len(s2)
+            self.stats["served_per_engine"][0] += len(s2)
         # verdicts: flow-table class (post-delivery) else switch tree
         verdict = np.asarray(out["verdict"])
         if self.tree is not None and cfg.fast_mode:
@@ -383,6 +455,8 @@ class FenixSystem:
         self.stats["granted"] += int(granted.sum())
         self.stats["classified_pkts"] += int(np.sum(verdict >= 0))
         self.stats["dropped_q"] = int(self.queues["dropped"])
+        # one depth sample per batch round; no engine queues on this path
+        self.stats["engine_q_depth_hist"][0][0] += 1
         return {"verdict": verdict, "granted": granted,
                 "slot": np.asarray(out["slot"])}
 
@@ -450,6 +524,26 @@ class FenixSystem:
                                      self.tree, self.tree_depth)
             self._pipe_tail_jit = jax.jit(tail)
 
+    def _ensure_farm_jits(self) -> None:
+        if self._farm_scan_jit is None:
+            cfg = self.cfg
+            de_local = _make_pipe_local(self.lcfg, cfg.io, self.tree,
+                                        self.tree_depth)
+            # per-engine budgets use the SINGLE-engine rate; their sum is
+            # the pooled admission rate baked into self.gcfg / self.lcfg
+            base_rate = cfg.engine.token_rate_per_us
+            mk = lambda masked: jax.jit(functools.partial(
+                jax.lax.scan,
+                farm.make_farm_step(cfg.num_pipes, cfg.num_engines,
+                                    cfg.io, base_rate,
+                                    cfg.loop_latency_us, de_local,
+                                    self.model, self._mesh, masked)))
+            self._farm_scan_jit = mk(False)
+            self._farm_scan_masked_jit = mk(True)
+            self._farm_tail_jit = jax.jit(farm.make_farm_tail(
+                cfg.num_pipes, cfg.num_engines, cfg.io, base_rate,
+                cfg.loop_latency_us, de_local, self.model))
+
     # -- full-trace drivers --------------------------------------------------
     def run_trace(self, stream: Dict[str, np.ndarray],
                   labels_by_flow: Optional[np.ndarray] = None
@@ -463,8 +557,8 @@ class FenixSystem:
         cfg = self.cfg
         if self._use_pipes:
             if not (cfg.fast_mode and cfg.device_path):
-                raise RuntimeError("multi-pipeline mode requires "
-                                   "fast_mode and device_path")
+                raise RuntimeError("multi-pipeline / engine-farm mode "
+                                   "requires fast_mode and device_path")
             return self._run_trace_pipes(stream)
         if not (cfg.fast_mode and cfg.device_path):
             return self._run_trace_host(stream)
@@ -493,7 +587,7 @@ class FenixSystem:
             window = {k: v[g:hi] for k, v in chunked.items()}
             carry, (vd, st) = self._scan_jit(carry, window)
             verd_parts.append(np.asarray(vd).reshape(-1))
-            stat_sum += np.asarray(st, np.int64).sum(axis=0)
+            stat_sum += np.asarray(st).astype(np.int64).sum(axis=0)
             self.state, self.queues, self._dl = carry
             if hi % cpe == 0:
                 # the single host sync per control-plane window
@@ -503,7 +597,7 @@ class FenixSystem:
         if tail is not None:
             carry, (vd, st) = self._step_jit(carry, tail)
             verd_parts.append(np.asarray(vd))
-            stat_sum += np.asarray(st, np.int64)
+            stat_sum += np.asarray(st).astype(np.int64)
             self.state, self.queues, self._dl = carry
             n_batches += 1
             if n_batches % cpe == 0:
@@ -516,6 +610,8 @@ class FenixSystem:
         self.stats["tree_pkts"] += int(stat_sum[3])
         self.stats["dropped_q"] = int(self.queues["dropped"])
         self.stats["dropped_inflight"] = int(self._dl["dropped"])
+        self.stats["served_per_engine"][0] += int(stat_sum[1])
+        self.stats["engine_q_depth_hist"][0][0] += n_batches
         verdicts = (np.concatenate(verd_parts).astype(np.int32)
                     if verd_parts else np.full(n, -1, np.int32))
         return {"verdict": verdicts}
@@ -571,10 +667,19 @@ class FenixSystem:
         single-pipe device driver: one segment, identity permutation, same
         chunking, same control-plane cadence — bit-identical (asserted in
         tests/test_multi_pipe.py).
+
+        Engine-farm mode drives the same loop with the farm step: the
+        carry gains the per-engine ingress queues (sharded over the
+        ``"engine"`` mesh axis), the scan additionally yields per-engine
+        served counts and ingress depths, and tails run through the farm
+        tail step (per-engine budget split, engine-tagged results).
+        ``num_engines=1`` forced through this path is bit-identical to the
+        pipes driver (asserted in tests/test_engine_farm.py).
         """
         cfg = self.cfg
         num_pipes, B, cpe = cfg.num_pipes, cfg.batch_size, \
             cfg.control_plane_every
+        use_farm, num_engines = self._use_farm, cfg.num_engines
         n = len(stream["ts_us"])
         arrs = {k: np.asarray(stream[k]) for k in PKT_KEYS}
         if self.oracle is not None and "flow_idx" in stream:
@@ -583,7 +688,14 @@ class FenixSystem:
                 self.oracle, stream["flow_idx"], stream["flow_pos"],
                 cfg.io.feat_len)
         order, starts, counts = self._route_pipes(stream)
-        self._ensure_pipe_jits()
+        if use_farm:
+            self._ensure_farm_jits()
+            scan_plain = self._farm_scan_jit
+            scan_masked = self._farm_scan_masked_jit
+        else:
+            self._ensure_pipe_jits()
+            scan_plain = self._pipe_scan_jit
+            scan_masked = self._pipe_scan_masked_jit
         # every pipe scans C = max_p(count_p // B) steps so the whole
         # uniform part is ONE sharded lax.scan: pipes whose streams run out
         # early replay a dummy batch with their state frozen (masked step);
@@ -608,25 +720,47 @@ class FenixSystem:
             chunked = {k: jax.device_put(v, xspec)
                        for k, v in chunked.items()}
             j_active = jax.device_put(j_active, xspec)
+        if use_farm:
+            eq = self.eq
+            if self._mesh is not None:
+                espec = NamedSharding(self._mesh, PartitionSpec("engine"))
+                eq = jax.tree.map(lambda x: jax.device_put(x, espec), eq)
+            carry = carry + (eq,)
         verd_parts: List[np.ndarray] = []                   # [*, P, B] blocks
         stat_sum = np.zeros(4, np.int64)
+        served_sum = np.zeros(num_engines, np.int64)
+        depth_rows: List[np.ndarray] = []                   # [*, E] samples
         for g in range(0, n_chunks, cpe):
             hi = min(g + cpe, n_chunks)
             window = {k: v[g:hi] for k, v in chunked.items()}
             if active[g:hi].all():
-                scan = self._pipe_scan_jit
+                scan = scan_plain
             else:                       # window contains frozen pipe steps
-                scan = self._pipe_scan_masked_jit
+                scan = scan_masked
                 window["_active"] = j_active[g:hi]
-            carry, (vd, st) = scan(carry, window)
+            if use_farm:
+                carry, (vd, st3, served, depth) = scan(carry, window)
+                served_w = np.asarray(served).astype(np.int64)     # [W, E]
+                served_sum += served_w.sum(axis=0)
+                depth_rows.append(np.asarray(depth).astype(np.int64))
+                st3 = np.asarray(st3).astype(np.int64).sum(axis=0)
+                stat_sum += np.asarray([st3[0], served_w.sum(),
+                                        st3[1], st3[2]])
+                self.pstate, self.pqueues, self.pdl, self.eq = carry
+            else:
+                carry, (vd, st) = scan(carry, window)
+                stat_sum += np.asarray(st).astype(np.int64).sum(axis=0)
+                self.pstate, self.pqueues, self.pdl = carry
             verd_parts.append(np.asarray(vd))
-            stat_sum += np.asarray(st, np.int64).sum(axis=0)
-            self.pstate, self.pqueues, self.pdl = carry
             if hi % cpe == 0:
                 # the single host sync per control-plane window
                 self.control_plane_pipes()
-                carry = (self.pstate, self.pqueues, self.pdl)
-        self.pstate, self.pqueues, self.pdl = carry
+                carry = (self.pstate, self.pqueues, self.pdl) \
+                    + ((self.eq,) if use_farm else ())
+        if use_farm:
+            self.pstate, self.pqueues, self.pdl, self.eq = carry
+        else:
+            self.pstate, self.pqueues, self.pdl = carry
         # per-pipe tails (< B packets each) run through the pipe-local tail
         # step; de-shard the carry once first so per-pipe slicing is local
         tails = [p for p in range(num_pipes)
@@ -644,14 +778,23 @@ class FenixSystem:
             batch = {k: jnp.asarray(v[sel]) for k, v in arrs.items()}
             carry_p = jax.tree.map(
                 lambda x: x[p], (self.pstate, self.pqueues, self.pdl))
-            carry_p, (vd, st) = self._pipe_tail_jit(carry_p, batch)
+            if use_farm:
+                carry_p, (vd, st, assign) = self._farm_tail_jit(carry_p,
+                                                                batch)
+                served_sum += np.asarray(assign).astype(np.int64)
+            else:
+                carry_p, (vd, st) = self._pipe_tail_jit(carry_p, batch)
             self.pstate, self.pqueues, self.pdl = jax.tree.map(
                 lambda full, part: full.at[p].set(part),
                 (self.pstate, self.pqueues, self.pdl), carry_p)
             rem_verds[p].append(np.asarray(vd))
-            stat_sum += np.asarray(st, np.int64)
+            stat_sum += np.asarray(st).astype(np.int64)
         if tails:
             n_batches += 1
+            if use_farm:            # one depth sample per batch round
+                depth_rows.append(np.asarray(
+                    self.eq["tail"] - self.eq["head"],
+                    np.int64).reshape(1, num_engines))
             if n_batches % cpe == 0:
                 self.control_plane_pipes()
         # scatter verdicts back to arrival order (masked scan rows are
@@ -672,4 +815,19 @@ class FenixSystem:
             self.pqueues["dropped"]).sum())
         self.stats["dropped_inflight"] = int(np.asarray(
             self.pdl["dropped"]).sum())
+        if use_farm:
+            self.stats["served_per_engine"] = [
+                a + int(b) for a, b in
+                zip(self.stats["served_per_engine"], served_sum)]
+            self.stats["dropped_eq"] = int(np.asarray(
+                self.eq["dropped"]).sum())
+            if depth_rows:
+                hist = farm.depth_histogram(
+                    np.concatenate(depth_rows, axis=0), num_engines)
+                self.stats["engine_q_depth_hist"] = [
+                    [a + b for a, b in zip(row, new)] for row, new in
+                    zip(self.stats["engine_q_depth_hist"], hist)]
+        else:
+            self.stats["served_per_engine"][0] += int(stat_sum[1])
+            self.stats["engine_q_depth_hist"][0][0] += n_batches
         return {"verdict": verdicts}

@@ -16,6 +16,11 @@ indices (deterministic on every backend).
 Push times are nondecreasing (batch timestamps are sorted and the loop
 latency is constant), so the due set is always a queue prefix and head
 advancement is a popcount.
+
+Engine-farm mode tags every entry with the Model Engine that served it
+(``eng`` field): results still return through the *owning pipe's* delay
+line — the tag is provenance for per-engine stats, delivery semantics are
+unchanged and the single-engine paths write tag 0 throughout.
 """
 
 from __future__ import annotations
@@ -34,6 +39,8 @@ def init(capacity: int) -> Dict[str, jax.Array]:
         "slot": jnp.zeros((capacity,), I32),
         "hash": jnp.zeros((capacity,), jnp.uint32),
         "cls": jnp.zeros((capacity,), I32),
+        # serving Model Engine (engine-farm tag; 0 outside farm mode)
+        "eng": jnp.zeros((capacity,), I32),
         "head": jnp.asarray(0, I32),
         "tail": jnp.asarray(0, I32),
         "dropped": jnp.asarray(0, I32),
@@ -41,19 +48,27 @@ def init(capacity: int) -> Dict[str, jax.Array]:
 
 
 def push(dl: Dict, deliver_ts: jax.Array, slots: jax.Array,
-         hashes: jax.Array, cls: jax.Array, count: jax.Array) -> Dict:
-    """Append the first ``count`` lanes with delivery time ``deliver_ts``."""
+         hashes: jax.Array, cls: jax.Array, count: jax.Array,
+         engines: jax.Array = None) -> Dict:
+    """Append the first ``count`` lanes with delivery time ``deliver_ts``.
+
+    ``engines`` tags each lane with the Model Engine that served it
+    (engine-farm mode); the single-engine paths leave it at 0.
+    """
     from repro.core.model_engine.vector_io import ring_append
 
     cap = dl["t"].shape[0]
     n = slots.shape[0]
+    if engines is None:
+        engines = jnp.zeros((n,), I32)
     valid = jnp.arange(n, dtype=I32) < count
-    fields = {k: dl[k] for k in ("t", "slot", "hash", "cls")}
+    fields = {k: dl[k] for k in ("t", "slot", "hash", "cls", "eng")}
     values = {
         "t": jnp.broadcast_to(jnp.asarray(deliver_ts).astype(I32), (n,)),
         "slot": slots.astype(I32),
         "hash": hashes.astype(jnp.uint32),
         "cls": cls.astype(I32),
+        "eng": engines.astype(I32),
     }
     out = dict(dl)
     fields, out["tail"], out["dropped"] = ring_append(
@@ -109,15 +124,19 @@ def init_pipes(capacity: int, num_pipes: int) -> Dict[str, jax.Array]:
 
 def push_pipes(dls: Dict, deliver_ts: jax.Array, slots: jax.Array,
                hashes: jax.Array, cls: jax.Array,
-               counts: jax.Array) -> Dict:
+               counts: jax.Array, engines: jax.Array = None) -> Dict:
     """Scatter one Model-Engine result batch back to the owning pipes.
 
     ``slots/hashes/cls`` keep the [pipe, lane] layout of ``dequeue_pipes``
     and ``deliver_ts``/``counts`` are per-pipe, so this is a vmapped
     ``push`` — no all-gather: each pipe's results land only in its own
-    delay line.
+    delay line.  ``engines`` optionally tags lanes with the serving Model
+    Engine (farm mode).
     """
-    return jax.vmap(push)(dls, deliver_ts, slots, hashes, cls, counts)
+    if engines is None:
+        engines = jnp.zeros_like(slots, I32)
+    return jax.vmap(push)(dls, deliver_ts, slots, hashes, cls, counts,
+                          engines)
 
 
 def deliver_pipes(states: Dict, dls: Dict, now: jax.Array,

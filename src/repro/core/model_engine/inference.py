@@ -32,6 +32,19 @@ class EngineModel:
                             backend=self.backend)
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
+    def infer_engines(self, payload: jax.Array) -> jax.Array:
+        """payload [E, B, T, 2] int32 -> class [E, B] int32.
+
+        Batched farm inference: each engine's service batch runs through
+        the same quantized model in one fused pass (classes are per-lane,
+        so batching across engines cannot change any verdict).  Used when
+        a single host drives several engines' lanes at once — the sharded
+        farm step instead calls ``infer`` per engine shard.
+        """
+        e, b = payload.shape[:2]
+        flat = payload.reshape((e * b,) + payload.shape[2:])
+        return self.infer(flat).reshape(e, b)
+
 
 def macs_per_inference(cfg: TrafficModelConfig) -> int:
     """Multiply-accumulates for one feature window (cycle model input)."""
@@ -71,6 +84,32 @@ class CycleModel:
     def throughput_inf_per_s(self, cfg: TrafficModelConfig) -> float:
         macs = macs_per_inference(cfg)
         return self.f_clk_hz * self.array_width ** 2 / macs
+
+    # -- engine-farm accounting (E independent arrays, ISSUE 3) -------------
+    def farm_throughput_inf_per_s(self, cfg: TrafficModelConfig,
+                                  num_engines: int) -> float:
+        """Aggregate service rate of ``num_engines`` independent engines.
+
+        Engines drain their ingress queues independently (no cross-engine
+        pipeline), so farm throughput is additive.
+        """
+        return num_engines * self.throughput_inf_per_s(cfg)
+
+    def farm_batch_latency_us(self, cfg: TrafficModelConfig, batch: int,
+                              num_engines: int) -> float:
+        """Service latency of a ``batch`` split across ``num_engines``.
+
+        The router balances the batch (ceil split); each engine pipelines
+        its share through its own systolic array: one fill + latency for
+        the first inference, then one result per ``macs / width^2`` cycles.
+        ``num_engines=1`` degenerates to the single-engine batch latency.
+        """
+        per_engine = -(-batch // max(num_engines, 1))
+        if per_engine <= 0:
+            return 0.0
+        macs = macs_per_inference(cfg)
+        issue_us = macs / (self.array_width ** 2) / self.f_clk_hz * 1e6
+        return self.latency_us(cfg) + (per_engine - 1) * issue_us
 
 
 def tpu_latency_us(cfg: TrafficModelConfig, batch: int = 128) -> Dict:

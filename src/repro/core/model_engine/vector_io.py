@@ -24,6 +24,16 @@ the integer remainder).  ``dequeue_pipes`` then drains each ring by its
 share; the dequeued lanes keep their [pipe, lane] layout, so inference
 results scatter straight back to the owning pipe's delay line with no
 all-gather of ring contents.
+
+Engine-farm ingress (§7 scale-out, ISSUE 3): with ``num_engines`` FPGA
+Model Engines behind the switch, each engine owns an *ingress* FIFO on the
+FPGA side of the interconnect (``init_engine_queues``).  The pipes'
+dequeued lanes are routed to engines by the same share/waterfall math with
+the roles flipped — ``engine_intake`` weights by each engine's free
+ingress space (the least-loaded engine takes the most lanes) and never
+assigns a lane beyond an engine's remaining capacity.  Ingress entries
+carry the owning pipe id so completed inferences scatter back to that
+pipe's delay line, tagged with the serving engine.
 """
 
 from __future__ import annotations
@@ -129,6 +139,24 @@ def ring_append(fields: Dict[str, jax.Array], values: Dict[str, jax.Array],
     return out, (tail + n_in).astype(I32), n_dropped
 
 
+def ring_pop(fields: Dict[str, jax.Array], head: jax.Array,
+             tail: jax.Array, cap: int, budget: jax.Array, lanes: int
+             ) -> Tuple[Dict[str, jax.Array], jax.Array, jax.Array]:
+    """Pop min(budget, occupancy, lanes) ring entries in FIFO order.
+
+    The dequeue twin of ``ring_append``, shared by the Vector-I/O FIFO
+    and the engine ingress queues: returns ([lanes]-shaped value arrays
+    with positions >= count zero-filled, head', count).
+    """
+    take = jnp.minimum(jnp.minimum(budget.astype(I32), tail - head),
+                       lanes)
+    lane = jnp.arange(lanes, dtype=I32)
+    idx = jnp.where(lane < take, jnp.mod(head + lane, cap), cap)
+    vals = {k: v.at[idx].get(mode="fill", fill_value=0)
+            for k, v in fields.items()}
+    return vals, (head + take).astype(I32), take
+
+
 def service_budget(span_us, rate_per_us: float, cap: int) -> jax.Array:
     """Model-Engine inferences servable in ``span_us``: clip(V*span, 1, cap).
 
@@ -174,9 +202,12 @@ def pipe_shares(occ: jax.Array, budget: jax.Array) -> jax.Array:
     budget = budget.astype(I32)
     total = jnp.sum(occ)
     # budget*occ reaches num_pipes*queue_len^2 — widen so large queue_len
-    # configs cannot wrap int32 into negative shares
-    base = jnp.minimum((budget.astype(jnp.int64) * occ.astype(jnp.int64)
-                        // jnp.maximum(total, 1).astype(jnp.int64)
+    # configs cannot wrap int32 into negative shares.  Without x64 the
+    # astype would silently truncate back to int32 (and warn on every
+    # trace), so only request the wide dtype when it actually exists.
+    wide = jnp.int64 if jax.config.jax_enable_x64 else I32
+    base = jnp.minimum((budget.astype(wide) * occ.astype(wide)
+                        // jnp.maximum(total, 1).astype(wide)
                         ).astype(I32), occ)
     leftover = jnp.maximum(budget - jnp.sum(base), 0)
     room = occ - base
@@ -218,6 +249,95 @@ def enqueue_device(q: Dict, cfg: IOConfig, valid: jax.Array,
     return out
 
 
+# -- engine-farm ingress FIFOs (one per Model Engine) ------------------------
+
+def engine_capacity(cfg: IOConfig, num_pipes: int) -> int:
+    """Per-engine ingress capacity: enough to absorb every pipe's ring."""
+    return num_pipes * cfg.queue_len
+
+
+def engine_serve_lanes(cfg: IOConfig, num_pipes: int) -> int:
+    """Static per-step service lane count of one engine.
+
+    ``num_pipes * serve_lanes`` bounds the lanes a single step can route
+    (each pipe dequeues at most ``serve_lanes``), so one engine serving a
+    whole step's intake — the ``num_engines=1`` identity case — never
+    leaves a routed lane waiting.
+    """
+    return num_pipes * cfg.serve_lanes
+
+
+def init_engine_queues(cfg: IOConfig, num_engines: int,
+                       num_pipes: int) -> Dict[str, jax.Array]:
+    """Per-engine ingress FIFOs: (slot, hash, feat, owning pipe) entries."""
+    cap = engine_capacity(cfg, num_pipes)
+    one = {
+        "eq_slot": jnp.zeros((cap,), I32),
+        "eq_hash": jnp.zeros((cap,), jnp.uint32),
+        "eq_feat": jnp.zeros((cap, cfg.feat_len, cfg.feat_dim), I32),
+        "eq_pipe": jnp.zeros((cap,), I32),
+        "head": jnp.asarray(0, I32),
+        "tail": jnp.asarray(0, I32),
+        "dropped": jnp.asarray(0, I32),
+    }
+    return {k: jnp.stack([one[k]] * num_engines) for k in one}
+
+
+def engine_free(eq: Dict, cfg: IOConfig, num_pipes: int) -> jax.Array:
+    """Remaining ingress space of one engine's queue slice."""
+    return (jnp.asarray(engine_capacity(cfg, num_pipes), I32)
+            - (eq["tail"] - eq["head"]))
+
+
+def engine_intake(free: jax.Array, n_lanes: jax.Array) -> jax.Array:
+    """Split ``n_lanes`` routed lanes across engines by free ingress space.
+
+    The ``pipe_shares`` waterfall with the roles flipped — engines are the
+    *consumers*: each engine first gets ``floor(n * free_e / sum(free))``
+    (the least-loaded engine takes the most lanes), the integer remainder
+    waterfalls in engine order.  Guarantees ``intake_e <= free_e`` (the
+    router never assigns beyond an engine's capacity) and
+    ``sum(intake) == min(n_lanes, sum(free))``.
+    """
+    return pipe_shares(free, n_lanes)
+
+
+def enqueue_engine(eq: Dict, cfg: IOConfig, num_pipes: int,
+                   valid: jax.Array, slots: jax.Array, hashes: jax.Array,
+                   feats: jax.Array, pipes: jax.Array) -> Dict:
+    """Masked append into one engine's ingress ring (FIFO/drop semantics)."""
+    fields = {k: eq[k] for k in ("eq_slot", "eq_hash", "eq_feat", "eq_pipe")}
+    values = {"eq_slot": slots.astype(I32),
+              "eq_hash": hashes.astype(jnp.uint32),
+              "eq_feat": feats.astype(I32),
+              "eq_pipe": pipes.astype(I32)}
+    out = dict(eq)
+    fields, out["tail"], out["dropped"] = ring_append(
+        fields, values, eq["head"], eq["tail"], eq["dropped"],
+        engine_capacity(cfg, num_pipes), valid)
+    out.update(fields)
+    return out
+
+
+def dequeue_engine(eq: Dict, cfg: IOConfig, num_pipes: int,
+                   budget: jax.Array
+                   ) -> Tuple[Dict, jax.Array, jax.Array, jax.Array,
+                              jax.Array, jax.Array]:
+    """Pop min(budget, occupancy, serve lanes) ingress entries, FIFO order.
+
+    Returns (eq', slots[S], hashes[S], feats[S, ...], pipes[S], count) with
+    ``S = engine_serve_lanes``; lanes >= count are zero-filled.
+    """
+    vals, head, take = ring_pop(
+        {k: eq[k] for k in ("eq_slot", "eq_hash", "eq_feat", "eq_pipe")},
+        eq["head"], eq["tail"], engine_capacity(cfg, num_pipes), budget,
+        engine_serve_lanes(cfg, num_pipes))
+    out = dict(eq)
+    out["head"] = head
+    return (out, vals["eq_slot"], vals["eq_hash"], vals["eq_feat"],
+            vals["eq_pipe"], take)
+
+
 def dequeue_device(q: Dict, cfg: IOConfig, budget: jax.Array
                    ) -> Tuple[Dict, jax.Array, jax.Array, jax.Array,
                               jax.Array]:
@@ -226,15 +346,10 @@ def dequeue_device(q: Dict, cfg: IOConfig, budget: jax.Array
     Returns (q', slots[serve_lanes], hashes[serve_lanes],
     feats[serve_lanes, ...], count); lanes >= count are zero-filled.
     """
-    cap = cfg.queue_len
-    head, tail = q["head"], q["tail"]
-    take = jnp.minimum(jnp.minimum(budget.astype(I32), tail - head),
-                       cfg.serve_lanes)
-    lane = jnp.arange(cfg.serve_lanes, dtype=I32)
-    idx = jnp.where(lane < take, jnp.mod(head + lane, cap), cap)
-    slots = q["id_q_slot"].at[idx].get(mode="fill", fill_value=0)
-    hashes = q["id_q_hash"].at[idx].get(mode="fill", fill_value=0)
-    feats = q["feat_q"].at[idx].get(mode="fill", fill_value=0)
+    vals, head, take = ring_pop(
+        {k: q[k] for k in ("id_q_slot", "id_q_hash", "feat_q")},
+        q["head"], q["tail"], cfg.queue_len, budget, cfg.serve_lanes)
     out = dict(q)
-    out["head"] = (head + take).astype(I32)
-    return out, slots, hashes, feats, take
+    out["head"] = head
+    return (out, vals["id_q_slot"], vals["id_q_hash"], vals["feat_q"],
+            take)

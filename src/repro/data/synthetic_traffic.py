@@ -138,6 +138,33 @@ def make_flows(task: str, n_flows: int, seed: int = 0,
     return flows
 
 
+def uniform_flow_stream(n_pkts: int, n_flows: int, seed: int = 0,
+                        gap_us: int = 10) -> Dict[str, np.ndarray]:
+    """Interleaved multi-packet flows at a fixed aggregate rate.
+
+    A structureless load generator (vs the class-conditioned ``make_flows``
+    path): ``n_flows`` random persistent 5-tuples with per-flow-constant
+    packet lengths, arrivals uniform at ``1e6 / gap_us`` offered pps.
+    Flows persist, so the flow table, backlog counters, and probability
+    gate see realistic per-flow state.  Used by the engine-farm benchmarks
+    and CI smokes; includes ``flow_idx`` for per-flow assertions.
+    """
+    rng = np.random.default_rng(seed)
+    five = {k: rng.integers(1, 2**31, n_flows).astype(np.uint32)
+            for k in ("src_ip", "dst_ip")}
+    five["src_port"] = rng.integers(1, 65536, n_flows).astype(np.uint32)
+    five["dst_port"] = rng.integers(1, 65536, n_flows).astype(np.uint32)
+    five["proto"] = rng.integers(6, 18, n_flows).astype(np.uint32)
+    lens = (40 + rng.integers(0, 1400, n_flows)).astype(np.int32)
+    fidx = rng.integers(0, n_flows, n_pkts).astype(np.int32)
+    stream = {k: v[fidx] for k, v in five.items()}
+    stream["pkt_len"] = lens[fidx]
+    stream["ts_us"] = np.sort(
+        rng.integers(0, n_pkts * gap_us, n_pkts)).astype(np.int32)
+    stream["flow_idx"] = fidx
+    return stream
+
+
 def ring_window(feats: np.ndarray, end: int, win: int) -> np.ndarray:
     """Window ENDING at packet `end` inclusive, front-padded with zeros —
     exactly what the switch ring buffer holds when packet `end` arrives."""

@@ -1,0 +1,285 @@
+"""Model-Engine farm (ISSUE 3): E FPGA engines behind one switch.
+
+Invariants:
+
+* the farm driver forced to one engine is *bit-identical* to the PR-2
+  multi-pipeline driver (states, stats, every verdict) — at one pipe, at
+  four pipes, and when ``serve_max`` binds the per-pipe dequeue;
+* the occupancy-based router (``vio.engine_intake``) never assigns a lane
+  beyond an engine's free ingress capacity and places every routable lane
+  (engines-as-consumers waterfall);
+* engine ingress FIFOs keep service order and the owning-pipe tag, so
+  verdicts scatter back to the right pipe's delay line, tagged with the
+  serving engine;
+* engine partitioning changes scheduling, not outcomes: with a
+  deterministic per-flow model, num_engines=1 and num_engines=4 classify
+  every collision-free flow identically (property test);
+* per-engine service stays within the per-engine budget accumulation;
+* the 2-D (pipe x engine) shard_map and the nested-vmap fallback agree
+  (when enough devices are up).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.fenix_models import fenix_cnn
+from repro.core.data_engine.state import (EngineConfig, farm_engine_config,
+                                          local_engine_config)
+from repro.core.fenix import FenixConfig, FenixSystem
+from repro.core.model_engine import engine_farm as farm
+from repro.core.model_engine import vector_io as vio
+from repro.core.model_engine.inference import CycleModel, EngineModel
+
+from test_multi_pipe import (ByLenModel, collision_free_flows,
+                             constant_len_stream)
+
+I32 = jnp.int32
+ENGINES = 4
+
+
+# -- config layer -------------------------------------------------------------
+
+def test_farm_config_scales_admission():
+    cfg = EngineConfig()
+    fcfg = farm_engine_config(cfg, ENGINES)
+    np.testing.assert_allclose(fcfg.token_rate_per_us,
+                               cfg.token_rate_per_us * ENGINES)
+    assert farm_engine_config(cfg, 1) == cfg
+    with pytest.raises(ValueError):
+        farm_engine_config(cfg, 0)
+    # pipes split the pooled rate, engines multiply it — orthogonal axes
+    lcfg = local_engine_config(farm_engine_config(cfg, 2), 4)
+    np.testing.assert_allclose(lcfg.token_rate_per_us,
+                               cfg.token_rate_per_us * 2 / 4)
+
+
+def test_farm_mesh_shape_or_fallback():
+    m = farm.farm_mesh(1, 1)
+    assert m is not None and m.axis_names == ("pipe", "engine")
+    if jax.device_count() >= 4:
+        m = farm.farm_mesh(2, 2)
+        assert m is not None and m.devices.shape == (2, 2)
+    assert farm.farm_mesh(64, 64) is None      # beyond any CI host
+
+
+# -- router -------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10**6), n_lanes=st.integers(0, 400))
+def test_engine_intake_never_exceeds_capacity(seed, n_lanes):
+    rng = np.random.default_rng(seed)
+    free = jnp.asarray(rng.integers(0, 120, ENGINES), I32)
+    intake = np.asarray(vio.engine_intake(free, jnp.asarray(n_lanes, I32)))
+    assert (intake >= 0).all()
+    assert (intake <= np.asarray(free)).all()      # never beyond capacity
+    assert intake.sum() == min(n_lanes, int(np.asarray(free).sum()))
+
+
+def test_engine_intake_prefers_least_loaded():
+    free = jnp.asarray([10, 90], I32)              # engine 1 nearly idle
+    intake = np.asarray(vio.engine_intake(free, jnp.asarray(50, I32)))
+    assert intake[1] > intake[0]
+    assert intake.sum() == 50
+
+
+def test_engine_queue_roundtrip_fifo_and_pipe_tags():
+    cfg = vio.IOConfig(queue_len=8, feat_len=3, feat_dim=2)
+    eq = vio.init_engine_queues(cfg, 2, num_pipes=2)
+    e0 = {k: v[0] for k, v in eq.items()}
+    feats = jnp.arange(5 * 3 * 2, dtype=I32).reshape(5, 3, 2)
+    e0 = vio.enqueue_engine(e0, cfg, 2,
+                            jnp.asarray([True, True, True, False, False]),
+                            jnp.arange(5, dtype=I32),
+                            jnp.arange(1, 6, dtype=jnp.uint32), feats,
+                            jnp.asarray([0, 1, 0, 1, 1], I32))
+    assert int(vio.engine_free(e0, cfg, 2)) == 2 * 8 - 3
+    e0, s, h, f, p, cnt = vio.dequeue_engine(e0, cfg, 2,
+                                             jnp.asarray(2, I32))
+    assert int(cnt) == 2
+    np.testing.assert_array_equal(np.asarray(s)[:2], [0, 1])
+    np.testing.assert_array_equal(np.asarray(p)[:2], [0, 1])
+    np.testing.assert_array_equal(np.asarray(f)[0], np.asarray(feats[0]))
+    # remaining entry still FIFO-ordered
+    e0, s, _, _, p, cnt = vio.dequeue_engine(e0, cfg, 2,
+                                             jnp.asarray(9, I32))
+    assert int(cnt) == 1 and int(s[0]) == 2 and int(p[0]) == 0
+
+
+def test_route_ranks_maps_pipe_major():
+    shares = jnp.asarray([3, 0, 2], I32)
+    pipe, lane, valid = farm.route_ranks(shares, 6, jnp.asarray(2, I32),
+                                         jnp.asarray(3, I32))
+    # ranks 2,3,4 -> (p0,l2), (p2,l0), (p2,l1); skips the empty pipe 1
+    np.testing.assert_array_equal(np.asarray(pipe)[:3], [0, 2, 2])
+    np.testing.assert_array_equal(np.asarray(lane)[:3], [2, 0, 1])
+    np.testing.assert_array_equal(np.asarray(valid),
+                                  [True, True, True, False, False, False])
+
+
+# -- full-system invariants ---------------------------------------------------
+
+def _bit_identical(s_ref, s_farm, stream):
+    v_ref = s_ref.run_trace(stream)["verdict"]
+    v_farm = s_farm.run_trace(stream)["verdict"]
+    assert s_ref.stats == s_farm.stats
+    np.testing.assert_array_equal(v_ref, v_farm)
+    for name in ("pstate", "pqueues", "pdl"):
+        ref, got = getattr(s_ref, name), getattr(s_farm, name)
+        for k in ref:
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(ref[k]),
+                                          err_msg=f"{name}.{k}")
+
+
+def test_farm_e1_bitwise_identical_to_pipes_driver():
+    """Acceptance: the farm path at num_engines=1 == the PR-2 driver."""
+    model = ByLenModel()
+    stream, _ = constant_len_stream(2100, 40, seed=7)   # tails included
+    for num_pipes in (1, 4):
+        mk = lambda use_farm: FenixSystem(
+            FenixConfig(batch_size=256, control_plane_every=3,
+                        num_pipes=num_pipes, pipes_path=True,
+                        farm_path=use_farm), model)
+        _bit_identical(mk(False), mk(True), stream)
+
+
+def test_farm_e1_identity_with_serve_cap():
+    """Identity also when serve_max binds the per-pipe dequeue below its
+    share — the router must route the capped counts, not the shares."""
+    model = ByLenModel()
+    stream, _ = constant_len_stream(2048, 32, seed=3, gap_us=40)
+    ecfg = EngineConfig(fpga_hz=0.05e6, link_bw_bytes=0.05e6 * 64)
+    mk = lambda use_farm: FenixSystem(
+        FenixConfig(engine=ecfg, io=vio.IOConfig(serve_max=8),
+                    batch_size=256, num_pipes=2, pipes_path=True,
+                    farm_path=use_farm), model)
+    _bit_identical(mk(False), mk(True), stream)
+
+
+@pytest.fixture(scope="module")
+def det_farms():
+    """One system per engine count, module-scoped so jits compile once."""
+    model = ByLenModel()
+    mk = lambda e: FenixSystem(
+        FenixConfig(batch_size=256, control_plane_every=4, num_engines=e,
+                    farm_path=True), model)
+    return mk(1), mk(ENGINES)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_engine_partitioning_preserves_per_flow_verdicts(det_farms, seed):
+    """num_engines=1 vs num_engines=4: identical per-flow verdict sets.
+
+    The farm redistributes WHICH engine serves a window and WHEN, never
+    WHAT the flow is classified as: with a deterministic per-flow model
+    every collision-free flow served in both layouts gets exactly the
+    same verdict set.
+    """
+    s1, s4 = det_farms
+    stream, lens = constant_len_stream(2048, 32, seed=seed)
+    flows_ok = collision_free_flows(stream, lens, s1.cfg.engine)
+    s1.reset()
+    s4.reset()
+    v1 = s1.run_trace(stream)["verdict"]
+    v4 = s4.run_trace(stream)["verdict"]
+    assert sum(s4.stats["served_per_engine"]) == s4.stats["inferences"]
+    fidx = stream["flow_idx"]
+    per_flow_1, per_flow_4 = {}, {}
+    for f in flows_ok:
+        per_flow_1[f] = set(v1[(fidx == f) & (v1 >= 0)].tolist())
+        per_flow_4[f] = set(v4[(fidx == f) & (v4 >= 0)].tolist())
+    assert per_flow_1 == per_flow_4
+    served = [f for f in flows_ok if per_flow_1[f]]
+    assert len(served) >= len(flows_ok) * 3 // 4
+    for f in served:
+        assert per_flow_1[f] == {int(lens[f]) % ByLenModel.num_classes}
+
+
+def test_router_capacity_and_budget_bounds():
+    """Saturating run: ingress never drops (capacity-aware router) and no
+    engine serves beyond its accumulated per-engine budget."""
+    model = ByLenModel()
+    stream, _ = constant_len_stream(4096, 64, seed=11, gap_us=10)
+    ecfg = EngineConfig(fpga_hz=0.1e6, link_bw_bytes=0.1e6 * 64)
+    sys_ = FenixSystem(FenixConfig(engine=ecfg, batch_size=256,
+                                   num_engines=ENGINES, num_pipes=2),
+                       model, n_est=0.0, q_est_pps=0.0)
+    sys_.run_trace(stream)
+    assert sys_.stats["dropped_eq"] == 0
+    span = int(stream["ts_us"][-1]) - int(stream["ts_us"][0])
+    n_rounds = -(-4096 // (2 * 256)) + 2
+    # per-engine budget: floor(span * V) summed over steps, each clipped
+    # to >= 1, plus the tail round's split
+    bound = span * ecfg.token_rate_per_us + n_rounds + 1
+    for served in sys_.stats["served_per_engine"]:
+        assert served <= bound, (served, bound)
+    assert sum(sys_.stats["served_per_engine"]) == sys_.stats["inferences"]
+    # queue-depth histogram saw every scan round, on every engine
+    for row in sys_.stats["engine_q_depth_hist"]:
+        assert sum(row) >= 4096 // (2 * 256)
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >= 2 devices for an engine mesh axis")
+def test_shard_map_matches_vmap_on_engine_axis():
+    """The 2-D mesh farm and the nested-vmap fallback agree bit-for-bit."""
+    model = ByLenModel()
+    stream, _ = constant_len_stream(2048, 32, seed=5)
+    n_dev = jax.device_count()
+    num_pipes = 2 if n_dev >= 4 else 1
+    mk = lambda: FenixSystem(FenixConfig(batch_size=256,
+                                         num_pipes=num_pipes,
+                                         num_engines=2), model)
+    s_mesh = mk()
+    assert s_mesh._mesh is not None
+    assert s_mesh._mesh.devices.shape == (num_pipes, 2)
+    s_vmap = mk()
+    s_vmap._mesh = None          # force the nested-vmap fallback
+    v_mesh = s_mesh.run_trace(stream)["verdict"]
+    v_vmap = s_vmap.run_trace(stream)["verdict"]
+    assert s_mesh.stats == s_vmap.stats
+    np.testing.assert_array_equal(v_mesh, v_vmap)
+
+
+# -- inference / accounting ---------------------------------------------------
+
+def test_infer_engines_matches_per_engine_infer():
+    cfg = fenix_cnn(7)
+    from repro.models import traffic
+    from repro.quant.quantize import quantize_traffic
+    params = traffic.init(cfg, 0)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 1500, (3, 4, cfg.seq_len, 2)), I32)
+    qp = quantize_traffic(params, cfg, x.reshape(12, cfg.seq_len, 2))
+    model = EngineModel(cfg, qp)
+    batched = np.asarray(model.infer_engines(x))
+    assert batched.shape == (3, 4)
+    for e in range(3):
+        np.testing.assert_array_equal(batched[e],
+                                      np.asarray(model.infer(x[e])))
+
+
+def test_cycle_model_farm_accounting():
+    cyc = CycleModel()
+    cfg = fenix_cnn(7)
+    np.testing.assert_allclose(cyc.farm_throughput_inf_per_s(cfg, 4),
+                               4 * cyc.throughput_inf_per_s(cfg))
+    l1 = cyc.farm_batch_latency_us(cfg, 256, 1)
+    l2 = cyc.farm_batch_latency_us(cfg, 256, 2)
+    l4 = cyc.farm_batch_latency_us(cfg, 256, 4)
+    assert l1 > l2 > l4 > 0
+    assert cyc.farm_batch_latency_us(cfg, 1, 1) == \
+        pytest.approx(cyc.latency_us(cfg))
+
+
+def test_depth_histogram_buckets():
+    depths = np.asarray([[0, 1], [1, 3], [4, 200_000]])
+    hist = farm.depth_histogram(depths, 2)
+    assert hist[0] == [1, 1, 0, 1] + [0] * (farm.DEPTH_BUCKETS - 4)
+    assert hist[1][1] == 1 and hist[1][2] == 1
+    assert hist[1][farm.DEPTH_BUCKETS - 1] == 1      # saturating bucket
