@@ -1,0 +1,34 @@
+"""Atomic JSON artifact writes for the benchmark harness.
+
+Benchmark sections write to ``benchmarks/results/*.json`` which CI uploads
+as artifacts and the regression gate diffs; a section that crashes mid-dump
+must not leave a truncated file behind.  ``write_json_atomic`` writes to a
+temp file in the destination directory (created if missing) and renames it
+into place — rename is atomic on POSIX, so readers only ever see the old or
+the new complete document.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+
+def write_json_atomic(path, obj, indent: int = 1, default=None) -> None:
+    path = os.fspath(path)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(
+        dir=d, prefix=".tmp-", suffix=os.path.basename(path)
+    )
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(obj, f, indent=indent, default=default)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise

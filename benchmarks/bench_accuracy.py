@@ -3,17 +3,22 @@
 FENIX flow/packet-level CNN+RNN (float-trained, INT8-deployed) vs FlowLens,
 NetBeacon, Leo, BoS, N3IC on the synthetic ISCX-like and USTC-like datasets
 (DESIGN.md §7: relative comparison on identical data).
+
+Real traces: pass ``sources={"iscx": capture, ...}`` (or ``--source`` on
+the CLI) to train/evaluate every scheme on an ingested pcap or CSV export
+instead of the parametric generators — flows come from
+``repro.data.trace_ingest.load_flows`` through the task's schema adapter.
 """
 
 from __future__ import annotations
 
-import json
 import time
-from typing import Dict
+from typing import Dict, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._io import write_json_atomic
 from repro.baselines import bos as bos_lib
 from repro.baselines import n3ic as n3ic_lib
 from repro.baselines.common import flow_vote, macro_f1
@@ -21,8 +26,7 @@ from repro.baselines.flowlens import FlowLensModel, markers
 from repro.baselines.leo import LeoModel
 from repro.baselines.netbeacon import NetBeaconModel
 from repro.configs.fenix_models import fenix_cnn, fenix_rnn
-from repro.data.synthetic_traffic import (class_weights, make_flows,
-                                          task_meta, train_test_split,
+from repro.data.synthetic_traffic import (class_weights, make_flows, task_meta,
                                           windows_from_flows)
 from repro.models import traffic
 from repro.quant.quantize import int8_apply, quantize_traffic
@@ -50,11 +54,27 @@ def _train_nn(loss_fn, params, x, y, steps, n_classes, lr=3e-3, seed=0):
     return t.params
 
 
+DEFAULT_ADAPTERS = {"iscx": "iscx_vpn", "ustc": "ustc_tfc"}
+
+
 def run_task(task: str, n_flows: int = 500, steps: int = 300,
-             seed: int = 0) -> Dict[str, Dict[str, float]]:
+             seed: int = 0, source=None,
+             adapter: Optional[str] = None) -> Dict[str, Dict[str, float]]:
     classes, _ = task_meta(task)
     k = len(classes)
-    flows = make_flows(task, n_flows, seed=seed, min_per_class=30)
+    if source is not None:
+        from repro.data.trace_ingest import load_flows
+
+        flows = load_flows(source,
+                           adapter=adapter or DEFAULT_ADAPTERS[task])
+        bad = [f for f in flows if not 0 <= f.label < k]
+        if bad:
+            raise ValueError(
+                f"{len(bad)} of {len(flows)} flows in {source} carry no "
+                f"valid {task} label (need a ground-truth sidecar or a "
+                f"labeled CSV)")
+    else:
+        flows = make_flows(task, n_flows, seed=seed, min_per_class=30)
     tr_flows, te_flows = _split_flows(flows, seed=seed)
     xtr, ytr, ftr = windows_from_flows(tr_flows, seed=seed)
     xte, yte, fte = windows_from_flows(te_flows, seed=seed + 1)
@@ -131,18 +151,41 @@ def run_task(task: str, n_flows: int = 500, steps: int = 300,
     return out
 
 
-def main(n_flows: int = 500, steps: int = 300, out_path: str = None):
+def main(n_flows: int = 500, steps: int = 300, out_path: str = None,
+         sources: Optional[Dict[str, str]] = None,
+         adapters: Optional[Dict[str, str]] = None):
+    sources, adapters = sources or {}, adapters or {}
     results = {}
     for task in ("iscx", "ustc"):
         t0 = time.time()
-        results[task] = run_task(task, n_flows=n_flows, steps=steps)
+        results[task] = run_task(task, n_flows=n_flows, steps=steps,
+                                 source=sources.get(task),
+                                 adapter=adapters.get(task))
         results[task]["_wall_s"] = round(time.time() - t0, 1)
     if out_path:
-        with open(out_path, "w") as f:
-            json.dump(results, f, indent=1)
+        write_json_atomic(out_path, results)
     return results
 
 
 if __name__ == "__main__":
+    import argparse
     import pprint
-    pprint.pprint(main())
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--task", choices=("iscx", "ustc"), default=None,
+                    help="limit to one task (required with --source)")
+    ap.add_argument("--source", default=None,
+                    help="capture (pcap/CSV) to use instead of synthetic")
+    ap.add_argument("--adapter", default=None,
+                    help="CSV schema adapter for --source")
+    ap.add_argument("--n-flows", type=int, default=500)
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    if args.source and not args.task:
+        ap.error("--source requires --task")
+    if args.task:
+        pprint.pprint({args.task: run_task(
+            args.task, n_flows=args.n_flows, steps=args.steps,
+            source=args.source, adapter=args.adapter)})
+    else:
+        pprint.pprint(main(n_flows=args.n_flows, steps=args.steps))

@@ -6,11 +6,11 @@ flows sampled under load (the paper's fairness argument)."""
 
 from __future__ import annotations
 
-import json
 from typing import Dict, List
 
 import numpy as np
 
+from benchmarks._io import write_json_atomic
 from repro.core.probability import expected_period, probability
 
 
@@ -61,8 +61,7 @@ def main(out_path: str = None) -> List[Dict]:
         print(f"{name}: measured {r['measured_mean']:.0f} vs N/V "
               f"{r['expected_nv']:.0f} (rel err {r['rel_err']:.3f})")
     if out_path:
-        with open(out_path, "w") as f:
-            json.dump(rows, f, indent=1)
+        write_json_atomic(out_path, rows)
     return rows
 
 

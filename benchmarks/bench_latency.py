@@ -11,7 +11,6 @@ transmission (optical, 1-3us), inference (FENIX 1.2us FPGA vs FlowLens
 
 from __future__ import annotations
 
-import json
 import time
 from typing import Dict
 
@@ -19,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._io import write_json_atomic
 from repro.configs.fenix_models import fenix_cnn, fenix_rnn
 from repro.core.model_engine.inference import (CycleModel, EngineModel,
                                                macs_per_inference,
@@ -80,8 +80,7 @@ def main(out_path: str = None) -> Dict:
                 / (PAPER["fenix"]["external_us"] + cm.latency_us(cfg)),
         }
     if out_path:
-        with open(out_path, "w") as f:
-            json.dump(out, f, indent=1)
+        write_json_atomic(out_path, out)
     return out
 
 

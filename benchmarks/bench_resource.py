@@ -10,11 +10,9 @@ working set of the INT8 kernels (LUT/FF/BRAM/DSP analogue on TPU).
 
 from __future__ import annotations
 
-import json
 from typing import Dict
 
-import numpy as np
-
+from benchmarks._io import write_json_atomic
 from repro.configs.fenix_models import fenix_cnn, fenix_rnn
 from repro.core.data_engine.state import EngineConfig
 from repro.core.model_engine.inference import macs_per_inference
@@ -90,8 +88,7 @@ def main(out_path: str = None) -> Dict:
         "paper_table3_published": PAPER_TABLE3,
     }
     if out_path:
-        with open(out_path, "w") as f:
-            json.dump(res, f, indent=1)
+        write_json_atomic(out_path, res)
     return res
 
 

@@ -10,18 +10,18 @@ which is exactly the mechanism simulated here.
 
 from __future__ import annotations
 
-import json
 import time
 from typing import Dict, List
 
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._io import write_json_atomic
 from repro.baselines.common import flow_vote, macro_f1
 from repro.configs.fenix_models import fenix_cnn
 from repro.core.fenix import FenixConfig, FenixSystem
 from repro.core.data_engine.state import EngineConfig
-from repro.core.model_engine.inference import EngineModel
+from repro.core.model_engine.inference import ByLenModel, EngineModel
 from repro.data.synthetic_traffic import (make_flows, packet_stream,
                                           windows_from_flows)
 from repro.models import traffic
@@ -71,15 +71,8 @@ def throughput(batch_size: int = 4096, n_batches: int = 12,
     return res
 
 
-class _LenModel:
-    """Trivial deterministic Model Engine (class = F9 pkt_len mod 7) so the
-    pipes sweep times the sharded data plane + merge, not DNN FLOPs."""
-
-    num_classes = 7
-
-    def infer(self, payload):
-        return (payload[:, -1, 0] % self.num_classes).astype(jnp.int32)
-
+# the sweeps use the shared deterministic ByLenModel so they time the
+# sharded data plane + merge, not DNN FLOPs
 
 def _balanced_stream(num_pipes: int, per_pipe: int, seed: int) -> Dict:
     """Synthetic packet stream with exactly ``per_pipe`` packets per pipe.
@@ -137,7 +130,7 @@ def pipes_sweep(batch_sizes=(4096, 8192), pipes=(1, 2, 4),
                 FenixConfig(engine=EngineConfig(),
                             io=IOConfig(serve_max=128),
                             batch_size=bs, control_plane_every=10**9,
-                            num_pipes=p), _LenModel())
+                            num_pipes=p), ByLenModel())
             sys_.run_trace(pk)                     # compile + warm
             sys_.reset()
             t0 = _time.perf_counter()
@@ -193,7 +186,7 @@ def engines_sweep(engines=(1, 2, 4), batch_size: int = 64,
             engine=EngineConfig(fpga_hz=fpga_hz),
             io=IOConfig(queue_len=256),
             batch_size=batch_size, control_plane_every=10**9,
-            num_engines=e, farm_path=True), _LenModel(),
+            num_engines=e, farm_path=True), ByLenModel(),
             n_est=0.0, q_est_pps=0.0)
         sys_.run_trace(pk)                     # compile + warm
         sys_.reset()
@@ -344,8 +337,7 @@ def main(out_path: str = None,
         doc = {"scales": rows}
         if tp is not None:
             doc["fastpath_throughput"] = tp
-        with open(out_path, "w") as f:
-            json.dump(doc, f, indent=1)
+        write_json_atomic(out_path, doc)
     return rows
 
 

@@ -1,0 +1,164 @@
+"""Trace replay: every driver (host/device/pipes/farm) over one ingested
+capture.
+
+Builds a deterministic pcap fixture with ``synthesize_pcap`` (the same
+generator CI caches), ingests it back through the streaming reader —
+asserting the ``pcap -> ingest -> packet_stream`` round trip is
+bit-identical to the source stream, the subsystem's correctness oracle —
+then replays the ingested stream through all four trace drivers (the
+capture is parsed once; each driver's wall clock times the driver, not
+re-ingestion — the ``run_trace(source=...)`` selector itself is covered
+by examples/trace_smoke.py and tests/test_trace_ingest.py):
+
+  host     batch-at-a-time reference loop (``device_path=False``)
+  device   jitted single-pipe ``lax.scan``
+  pipes    2-pipeline sharded driver (vmap fallback below 2 devices)
+  farm     2-pipe x 2-engine Model-Engine farm
+
+The stats dicts stay structurally comparable across drivers (same keys —
+asserted), so the regression gate can diff any of them; rows land in
+``benchmarks/results/traces.json``.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks._io import write_json_atomic
+from repro.core.data_engine.state import EngineConfig
+from repro.core.fenix import FenixConfig, FenixSystem
+from repro.core.model_engine.inference import ByLenModel
+from repro.data import trace_ingest as ti
+from repro.data.synthetic_traffic import make_flows
+
+FIXTURE_DIR = os.environ.get(
+    "TRACE_FIXTURE_DIR",
+    os.path.join(os.path.dirname(__file__), "fixtures"))
+
+# deterministic fixture recipe — examples/trace_smoke.py and the CI cache
+# key both hang off this module, so changing it regenerates fixtures
+FIXTURE_TASK = "iscx"
+FIXTURE_FLOWS = 220
+FIXTURE_SEED = 23
+FIXTURE_LIMIT = 16384
+
+
+def build_fixture(fixture_dir: str = FIXTURE_DIR,
+                  verify: bool = True) -> str:
+    """Materialize (or reuse) the pcap fixture; returns its path.
+
+    The generator is deterministic, so the oracle stream can be recomputed
+    regardless of whether the file came from a fresh write or a CI cache
+    hit — ``verify`` re-ingests and asserts bit-identity either way, which
+    is what makes a cached fixture trustworthy.
+    """
+    os.makedirs(fixture_dir, exist_ok=True)
+    pcap = os.path.join(fixture_dir,
+                        f"{FIXTURE_TASK}_replay_s{FIXTURE_SEED}.pcap")
+    flows = make_flows(FIXTURE_TASK, FIXTURE_FLOWS, seed=FIXTURE_SEED,
+                       min_per_class=8, duration_s=10.0)
+    if os.path.exists(pcap) and os.path.exists(ti.sidecar_path(pcap)):
+        from repro.data.synthetic_traffic import packet_stream
+        oracle = packet_stream(flows, limit=FIXTURE_LIMIT)
+    else:
+        oracle = ti.synthesize_pcap(flows, pcap, limit=FIXTURE_LIMIT)
+    if verify:
+        got = ti.ingest_pcap(pcap)
+        for k in oracle:
+            np.testing.assert_array_equal(
+                got[k], oracle[k],
+                err_msg=f"pcap round-trip diverged on {k!r} — stale or "
+                        f"corrupt fixture {pcap}; delete it to rebuild")
+    return pcap
+
+
+def _driver_configs(batch_size: int) -> List:
+    ecfg = EngineConfig()
+    return [
+        ("host", FenixConfig(engine=ecfg, batch_size=batch_size,
+                             device_path=False)),
+        ("device", FenixConfig(engine=ecfg, batch_size=batch_size)),
+        ("pipes", FenixConfig(engine=ecfg, batch_size=batch_size,
+                              num_pipes=2)),
+        ("farm", FenixConfig(engine=ecfg, batch_size=batch_size,
+                             num_pipes=2, num_engines=2, farm_path=True)),
+    ]
+
+
+def replay(stream: Dict, batch_size: int = 512) -> List[Dict]:
+    """Replay one ingested stream through all four drivers; one row
+    per driver (wall clock covers the driver only)."""
+    rows: List[Dict] = []
+    stats_keys = None
+    n_probe = len(stream["ts_us"])
+    for name, cfg in _driver_configs(batch_size):
+        sys_ = FenixSystem(cfg, ByLenModel())
+        t0 = time.perf_counter()
+        out = sys_.run_trace(stream)
+        wall = time.perf_counter() - t0
+        st = sys_.stats
+        if stats_keys is None:
+            stats_keys = sorted(st)
+        assert sorted(st) == stats_keys, (
+            f"driver {name} stats keys diverge: {sorted(st)} vs "
+            f"{stats_keys}")
+        v = out["verdict"]
+        rows.append({
+            "driver": name, "packets": int(st["packets"]),
+            "wall_s": round(wall, 3),
+            "pps_wall": st["packets"] / max(wall, 1e-9),
+            "granted": int(st["granted"]),
+            "inferences": int(st["inferences"]),
+            "classified_frac": float((v >= 0).mean()) if len(v) else 0.0,
+            "dropped_q": int(st["dropped_q"]),
+            "served_per_engine": list(st["served_per_engine"]),
+            "num_pipes": cfg.num_pipes, "num_engines": cfg.num_engines,
+        })
+        assert rows[-1]["packets"] == n_probe
+        print(rows[-1], flush=True)
+    return rows
+
+
+def main(out_path: Optional[str] = None, fast: bool = True,
+         source: Optional[str] = None,
+         adapter: Optional[str] = None) -> Dict:
+    """``--only traces`` entry point.
+
+    ``source`` replays a user-supplied capture (pcap or CSV via
+    ``adapter``) instead of the synthesized fixture.
+    """
+    pcap = build_fixture() if source is None else source
+    limit = 6144 if fast else None
+    # parse the capture exactly once; drivers replay the in-memory stream
+    stream = ti.load_stream(pcap, adapter=adapter, limit=limit)
+    # served inferences per *simulated* second — machine-independent, the
+    # regression gate's stable rate metric
+    span_us = max(int(stream["ts_us"].max() - stream["ts_us"].min()), 1)
+    rows = replay(stream)
+    for r in rows:
+        r["served_inf_per_s"] = r["inferences"] / (span_us / 1e6)
+    res = {"source": os.path.basename(str(pcap)), "limit": limit,
+           "span_us": span_us, "rows": rows}
+    if out_path:
+        write_json_atomic(out_path, res)
+    return res
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--source", default=None,
+                    help="capture to replay (default: synthesized fixture)")
+    ap.add_argument("--adapter", default=None,
+                    help="CSV schema adapter for --source")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "results", "traces.json"))
+    args = ap.parse_args()
+    main(out_path=args.out, fast=not args.full, source=args.source,
+         adapter=args.adapter)

@@ -1,0 +1,179 @@
+"""Benchmark regression gate: current ``--fast`` results vs the committed
+baseline.
+
+CI runs ``python -m benchmarks.run --fast --only <gated sections>`` and
+then this module.  Every metric present in ``benchmarks/results/baseline/``
+is compared against the freshly written ``benchmarks/results/`` document:
+
+  rate metrics (pps, served inferences/s)  fail when they drop more than
+                                           ``--pps-tol`` (default 20%)
+  f1 metrics (macro-F1)                    fail when they drop more than
+                                           ``--f1-tol`` (default 0.05)
+                                           absolute
+
+A diff summary (metric, baseline, current, delta, verdict) is printed to
+the job log either way; the exit code gates the build.  Metrics/files in
+the baseline but missing from the current run fail; extra current metrics
+are ignored (so adding benchmarks never requires touching the gate).
+
+Wall-clock rates vary with runner hardware — re-baseline with
+``python -m benchmarks.check_regression --rebaseline`` after intentional
+performance changes (copies the gated result files over the baseline), and
+tune ``--pps-tol`` (or the ``REGRESSION_PPS_TOL`` env var) if CI runners
+are noisier than 20%.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from typing import Dict, List, Tuple
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+BASELINE = os.path.join(RESULTS, "baseline")
+
+# metric kinds: "rate" -> relative-drop gate, "f1" -> absolute-drop gate
+Metric = Tuple[str, str, float]
+
+
+def _metrics_throughput(doc) -> List[Metric]:
+    return [("segment_pps", "rate", doc["segment"]["pps"])]
+
+
+def _metrics_engines(doc) -> List[Metric]:
+    return [(f"e{r['num_engines']}_served_inf_per_s", "rate",
+             r["served_inf_per_s"]) for r in doc["rows"]]
+
+
+def _metrics_traces(doc) -> List[Metric]:
+    # gate the *simulated* service rate only: it is machine-independent
+    # and bit-stable run to run.  Per-driver wall-clock pps at --fast
+    # packet counts swings far more than 20% with runner load (observed
+    # -36% on the host python-loop driver between back-to-back runs on
+    # the same box), so it stays informational in traces.json.
+    return [(f"{r['driver']}_served_inf_per_s", "rate",
+             r["served_inf_per_s"]) for r in doc["rows"]]
+
+
+def _metrics_accuracy(doc) -> List[Metric]:
+    out: List[Metric] = []
+    for task, schemes in doc.items():
+        if not isinstance(schemes, dict):
+            continue
+        for name, res in schemes.items():
+            if isinstance(res, dict) and "macro_f1" in res:
+                out.append((f"{task}/{name}", "f1", res["macro_f1"]))
+    return out
+
+
+EXTRACTORS = {
+    "throughput.json": _metrics_throughput,
+    "engines.json": _metrics_engines,
+    "traces.json": _metrics_traces,
+    "accuracy.json": _metrics_accuracy,
+}
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(results_dir: str = RESULTS, baseline_dir: str = BASELINE,
+            pps_tol: float = 0.20, f1_tol: float = 0.05
+            ) -> Tuple[List[Dict], int]:
+    """-> (rows, n_failures).  One row per gated metric."""
+    rows: List[Dict] = []
+    failures = 0
+    for fname, extract in sorted(EXTRACTORS.items()):
+        base_path = os.path.join(baseline_dir, fname)
+        if not os.path.exists(base_path):
+            continue                       # nothing committed: not gated
+        cur_path = os.path.join(results_dir, fname)
+        if not os.path.exists(cur_path):
+            rows.append({"metric": fname, "baseline": "present",
+                         "current": "MISSING", "delta": "",
+                         "status": "FAIL"})
+            failures += 1
+            continue
+        base = dict((m[0], m) for m in extract(_load(base_path)))
+        cur = dict((m[0], m) for m in extract(_load(cur_path)))
+        for name, (_, kind, bval) in sorted(base.items()):
+            tag = f"{fname.removesuffix('.json')}/{name}"
+            if name not in cur:
+                rows.append({"metric": tag, "baseline": f"{bval:.4g}",
+                             "current": "MISSING", "delta": "",
+                             "status": "FAIL"})
+                failures += 1
+                continue
+            cval = cur[name][2]
+            if kind == "rate":
+                drop = (bval - cval) / max(bval, 1e-12)
+                ok = drop <= pps_tol
+                delta = f"{-drop:+.1%}"
+            else:
+                drop = bval - cval
+                ok = drop <= f1_tol
+                delta = f"{-drop:+.4f}"
+            rows.append({"metric": tag, "baseline": f"{bval:.4g}",
+                         "current": f"{cval:.4g}", "delta": delta,
+                         "status": "ok" if ok else "FAIL"})
+            failures += 0 if ok else 1
+    return rows, failures
+
+
+def rebaseline(results_dir: str = RESULTS,
+               baseline_dir: str = BASELINE) -> None:
+    os.makedirs(baseline_dir, exist_ok=True)
+    for fname in EXTRACTORS:
+        src = os.path.join(results_dir, fname)
+        if os.path.exists(src):
+            shutil.copyfile(src, os.path.join(baseline_dir, fname))
+            print(f"rebaselined {fname}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--results", default=RESULTS)
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--pps-tol", type=float, default=float(
+        os.environ.get("REGRESSION_PPS_TOL", 0.20)),
+        help="max relative drop for rate metrics (default 0.20)")
+    ap.add_argument("--f1-tol", type=float, default=float(
+        os.environ.get("REGRESSION_F1_TOL", 0.05)),
+        help="max absolute drop for macro-F1 metrics (default 0.05)")
+    ap.add_argument("--rebaseline", action="store_true",
+                    help="copy current gated results over the baseline")
+    args = ap.parse_args(argv)
+    if args.rebaseline:
+        rebaseline(args.results, args.baseline)
+        return 0
+    rows, failures = compare(args.results, args.baseline,
+                             pps_tol=args.pps_tol, f1_tol=args.f1_tol)
+    if not rows:
+        print(f"no baseline files under {args.baseline}; nothing gated")
+        return 0
+    widths = [max(len(str(r[k])) for r in rows + [
+        {"metric": "metric", "baseline": "baseline", "current": "current",
+         "delta": "delta", "status": "status"}])
+        for k in ("metric", "baseline", "current", "delta", "status")]
+    fmt = ("{:<%d}  {:>%d}  {:>%d}  {:>%d}  {:<%d}" % tuple(widths))
+    print(fmt.format("metric", "baseline", "current", "delta", "status"))
+    for r in rows:
+        print(fmt.format(r["metric"], r["baseline"], r["current"],
+                         r["delta"], r["status"]))
+    n = len(rows)
+    if failures:
+        print(f"\nREGRESSION: {failures}/{n} gated metrics failed "
+              f"(rate tol {args.pps_tol:.0%}, f1 tol {args.f1_tol})")
+        return 1
+    print(f"\nall {n} gated metrics within tolerance "
+          f"(rate tol {args.pps_tol:.0%}, f1 tol {args.f1_tol})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

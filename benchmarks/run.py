@@ -9,6 +9,9 @@ JSON artifacts land in benchmarks/results/.
                  E=2 >= 1.7x served inferences/s over E=1 at saturation)
   oversub      — Figure 10 analogue at batch 8192 (F1 + pps vs offered
                  load past the Model-Engine service capacity)
+  traces       — real-trace replay (ISSUE 4): pcap fixture -> streaming
+                 ingest (bit-identity oracle) -> all four drivers
+                 (host/device/pipes/farm) via run_trace(source=...)
   accuracy     — Table 2 (macro-F1, 9 schemes x 2 tasks)
   resource     — Tables 3+4 (SRAM/VMEM/MAC proxies)
   scalability  — Figure 10 (F1 vs concurrency/throughput)
@@ -22,7 +25,6 @@ JSON artifacts land in benchmarks/results/.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -30,10 +32,13 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
+from benchmarks._io import write_json_atomic
+
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
-SECTIONS = ("throughput", "pipes", "engines", "oversub", "accuracy",
-            "resource", "scalability", "latency", "fairness", "roofline")
+SECTIONS = ("throughput", "pipes", "engines", "oversub", "traces",
+            "accuracy", "resource", "scalability", "latency", "fairness",
+            "roofline")
 
 
 def _row(name: str, us: float, derived: str) -> None:
@@ -64,8 +69,7 @@ def main() -> None:
         from benchmarks import bench_scalability
         n_b = 4 if args.fast else 12
         res = bench_scalability.throughput(n_batches=n_b)
-        with open(os.path.join(RESULTS, "throughput.json"), "w") as f:
-            json.dump(res, f, indent=1)
+        write_json_atomic(os.path.join(RESULTS, "throughput.json"), res)
         _row("fastpath_throughput", res["segment"]["us_per_batch"],
              f"pps={res['segment']['pps']:.0f};"
              f"speedup_vs_dense={res['speedup_vs_dense']:.1f}x")
@@ -76,8 +80,8 @@ def main() -> None:
         steps = 4 if args.fast else 8
         rows = bench_scalability.pipes_sweep(batch_sizes=sizes,
                                              n_steps=steps)
-        with open(os.path.join(RESULTS, "pipes.json"), "w") as f:
-            json.dump({"rows": rows}, f, indent=1)
+        write_json_atomic(os.path.join(RESULTS, "pipes.json"),
+                          {"rows": rows})
         for r in rows:
             _row(f"pipes_p{r['num_pipes']}_b{r['batch_size']}",
                  r["wall_s"] * 1e6 / max(r["packets"] // r["batch_size"], 1),
@@ -90,8 +94,8 @@ def main() -> None:
         steps = 192 if args.fast else 512
         rows = bench_scalability.engines_sweep(engines=(1, 2, 4),
                                                n_steps=steps)
-        with open(os.path.join(RESULTS, "engines.json"), "w") as f:
-            json.dump({"rows": rows}, f, indent=1)
+        write_json_atomic(os.path.join(RESULTS, "engines.json"),
+                          {"rows": rows})
         for r in rows:
             _row(f"engines_e{r['num_engines']}", r["wall_s"] * 1e6,
                  f"served_per_s={r['served_inf_per_s']:.0f};"
@@ -107,14 +111,28 @@ def main() -> None:
                 train_steps=150, train_flows=250)
         else:
             res = bench_scalability.oversub_sweep()
-        with open(os.path.join(RESULTS, "oversub.json"), "w") as f:
-            json.dump(res, f, indent=1)
+        write_json_atomic(os.path.join(RESULTS, "oversub.json"), res)
         rows = res["rows"]
         _row("oversub", (time.time() - t0) * 1e6,
              f"f1_lo={rows[0]['macro_f1']:.3f};"
              f"f1_hi={rows[-1]['macro_f1']:.3f};"
              f"rel_drop={res['rel_f1_drop']:.3f};"
              f"pps={rows[-1]['pps_wall']:.0f}")
+
+    if want("traces"):
+        from benchmarks import bench_traces
+        t0 = time.time()
+        res = bench_traces.main(
+            out_path=os.path.join(RESULTS, "traces.json"),
+            fast=args.fast)
+        for r in res["rows"]:
+            _row(f"traces_{r['driver']}", r["wall_s"] * 1e6,
+                 f"pps={r['pps_wall']:.0f};"
+                 f"served_per_s={r['served_inf_per_s']:.0f};"
+                 f"classified_frac={r['classified_frac']:.3f}")
+        _row("traces_total", (time.time() - t0) * 1e6,
+             f"packets={res['rows'][0]['packets']};"
+             f"source={res['source']}")
 
     if want("accuracy"):
         from benchmarks import bench_accuracy
@@ -181,8 +199,8 @@ def main() -> None:
                      f"cells={len(ok)};worst_ratio="
                      f"{worst['useful_ratio']:.2f}@"
                      f"{worst['arch']}x{worst['shape']}")
-                with open(os.path.join(RESULTS, "roofline.json"), "w") as f:
-                    json.dump(cells, f, indent=1, default=str)
+                write_json_atomic(os.path.join(RESULTS, "roofline.json"),
+                                  cells, default=str)
         except Exception as e:  # dry-run artifacts absent
             _row("roofline", 0.0, f"skipped({e})")
 

@@ -16,27 +16,19 @@ Run on CPU with virtual devices:
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.fenix import FenixConfig, FenixSystem
+from repro.core.model_engine.inference import ByLenModel
 from repro.data.synthetic_traffic import uniform_flow_stream
-
-
-class ByLenModel:
-    """Deterministic stand-in Model Engine: class = F9 pkt_len mod 7."""
-
-    num_classes = 7
-
-    def infer(self, payload):
-        return (payload[:, -1, 0] % self.num_classes).astype(jnp.int32)
 
 
 def main() -> None:
     print(f"devices: {jax.device_count()}")
     stream = uniform_flow_stream(2048, 48, gap_us=100)
-    mk = lambda: FenixSystem(
-        FenixConfig(batch_size=256, control_plane_every=4,
-                    num_pipes=2, num_engines=2), ByLenModel())
+    def mk():
+        return FenixSystem(
+            FenixConfig(batch_size=256, control_plane_every=4,
+                        num_pipes=2, num_engines=2), ByLenModel())
 
     sys_mesh = mk()
     assert sys_mesh._mesh is not None, (

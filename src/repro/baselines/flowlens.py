@@ -13,7 +13,7 @@ regression trees, shrinkage 0.3) — numpy-only, no external deps.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

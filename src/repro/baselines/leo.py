@@ -13,7 +13,7 @@ from typing import Dict, List
 import jax.numpy as jnp
 import numpy as np
 
-from repro.baselines.common import flow_feature_matrix, flow_prefix_features
+from repro.baselines.common import flow_feature_matrix
 from repro.core.data_engine.decision_tree import (TreeParams, fit_tree,
                                                   predict, tree_arrays)
 from repro.data.synthetic_traffic import Flow

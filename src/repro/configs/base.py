@@ -14,7 +14,7 @@ multi-pod dry-run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Tuple
 
 # ---------------------------------------------------------------------------
 # Shapes (assigned input-shape set, identical for all 10 LM-family archs)

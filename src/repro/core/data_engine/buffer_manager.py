@@ -9,7 +9,7 @@ packet for the Model Engine.
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ CART fit (numpy) — used both here and as the Leo baseline's building block.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -71,7 +71,6 @@ try:                                    # moved out of experimental in newer jax
 except ImportError:
     from jax.experimental.shard_map import shard_map
 
-from repro.configs.fenix_models import TrafficModelConfig
 from repro.core.data_engine import engine as de
 from repro.core.data_engine import rate_limiter as rl
 from repro.core.data_engine.state import (EngineConfig, farm_engine_config,
@@ -512,11 +511,13 @@ class FenixSystem:
 
     def _ensure_pipe_jits(self) -> None:
         if self._pipe_scan_jit is None:
-            mk = lambda masked: jax.jit(functools.partial(
-                jax.lax.scan,
-                _make_pipes_step(self.cfg, self.lcfg, self.model,
-                                 self.tree, self.tree_depth, self._mesh,
-                                 masked)))
+            def mk(masked):
+                return jax.jit(functools.partial(
+                    jax.lax.scan,
+                    _make_pipes_step(self.cfg, self.lcfg, self.model,
+                                     self.tree, self.tree_depth,
+                                     self._mesh, masked)))
+
             self._pipe_scan_jit = mk(False)
             self._pipe_scan_masked_jit = mk(True)
             tail = _make_single_step(self.lcfg, self.cfg.io,
@@ -532,12 +533,14 @@ class FenixSystem:
             # per-engine budgets use the SINGLE-engine rate; their sum is
             # the pooled admission rate baked into self.gcfg / self.lcfg
             base_rate = cfg.engine.token_rate_per_us
-            mk = lambda masked: jax.jit(functools.partial(
-                jax.lax.scan,
-                farm.make_farm_step(cfg.num_pipes, cfg.num_engines,
-                                    cfg.io, base_rate,
-                                    cfg.loop_latency_us, de_local,
-                                    self.model, self._mesh, masked)))
+            def mk(masked):
+                return jax.jit(functools.partial(
+                    jax.lax.scan,
+                    farm.make_farm_step(cfg.num_pipes, cfg.num_engines,
+                                        cfg.io, base_rate,
+                                        cfg.loop_latency_us, de_local,
+                                        self.model, self._mesh, masked)))
+
             self._farm_scan_jit = mk(False)
             self._farm_scan_masked_jit = mk(True)
             self._farm_tail_jit = jax.jit(farm.make_farm_tail(
@@ -545,15 +548,33 @@ class FenixSystem:
                 cfg.loop_latency_us, de_local, self.model))
 
     # -- full-trace drivers --------------------------------------------------
-    def run_trace(self, stream: Dict[str, np.ndarray],
-                  labels_by_flow: Optional[np.ndarray] = None
+    def run_trace(self, stream: Optional[Dict[str, np.ndarray]] = None,
+                  labels_by_flow: Optional[np.ndarray] = None,
+                  source=None, adapter=None,
+                  trace_labels="auto", limit: Optional[int] = None
                   ) -> Dict[str, np.ndarray]:
         """Feed a packet stream; returns per-packet verdicts.
+
+        The trace comes either from ``stream`` (a packet_stream dict, the
+        historical form) or from ``source`` — a capture path (raw pcap or
+        CSV) ingested through :mod:`repro.data.trace_ingest`; ``adapter``
+        names the CSV schema (``generic``/``iscx_vpn``/``ustc_tfc``),
+        ``trace_labels`` the pcap ground-truth sidecar (default: the
+        ``<pcap>.labels.csv`` convention), and ``limit`` truncates the
+        capture without reading the rest of it.
 
         Fast mode with ``device_path`` runs the jitted scan driver —
         sharded over the pipe mesh when multi-pipeline mode is on; scan
         (exact) mode and ``device_path=False`` use the host loop.
         """
+        if (stream is None) == (source is None):
+            raise ValueError(
+                "run_trace needs exactly one of stream= or source=")
+        if source is not None:
+            from repro.data import trace_ingest
+            stream = trace_ingest.load_stream(source, adapter=adapter,
+                                              labels=trace_labels,
+                                              limit=limit)
         cfg = self.cfg
         if self._use_pipes:
             if not (cfg.fast_mode and cfg.device_path):

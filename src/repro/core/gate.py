@@ -17,7 +17,7 @@ un-overloaded — same math, same LUT, same bucket (§4.2 / Appendix A).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
 
 import numpy as np
 

@@ -10,11 +10,10 @@ microbenchmark: MACs / (array_width^2 * f_clk) plus a fixed pipeline fill.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.fenix_models import TrafficModelConfig
 from repro.quant.quantize import int8_apply
@@ -44,6 +43,24 @@ class EngineModel:
         e, b = payload.shape[:2]
         flat = payload.reshape((e * b,) + payload.shape[2:])
         return self.infer(flat).reshape(e, b)
+
+
+class ByLenModel:
+    """Deterministic stand-in Model Engine: class = F9 pkt_len mod 7.
+
+    The one shared copy for benchmarks/examples/tests that measure the
+    data plane and drivers rather than DNN quality — cross-driver
+    identity assertions must compare against the *same* model, so do not
+    redeclare this locally.
+    """
+
+    num_classes = 7
+
+    def infer(self, payload: jax.Array) -> jax.Array:
+        return (payload[:, -1, 0] % self.num_classes).astype(jnp.int32)
+
+    def infer_engines(self, payload: jax.Array) -> jax.Array:
+        return (payload[:, :, -1, 0] % self.num_classes).astype(jnp.int32)
 
 
 def macs_per_inference(cfg: TrafficModelConfig) -> int:

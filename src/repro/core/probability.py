@@ -19,7 +19,6 @@ Appendix A proves the rate-weighted mean period is exactly N/V.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import numpy as np
 

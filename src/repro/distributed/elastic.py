@@ -19,7 +19,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import api
-from repro.models.param import sharding_ctx, spec_for, tree_pspecs
+from repro.models.param import sharding_ctx, tree_pspecs
 
 
 @dataclasses.dataclass

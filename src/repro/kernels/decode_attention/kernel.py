@@ -20,7 +20,6 @@ per head at D=128).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ result back.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -22,7 +22,7 @@ import dataclasses
 import json
 import re
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -156,7 +156,6 @@ def apply_overrides(cfg, overrides: Dict[str, str]):
         else:
             raise ValueError(key)
     return cfg
-
 
 
 def _ns(mesh, tree):

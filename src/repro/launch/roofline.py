@@ -20,10 +20,8 @@ import json
 import os
 from typing import Dict, List, Optional
 
-import numpy as np
-
 from repro.configs import SHAPES, get_config
-from repro.models.api import analytic_param_count, model_flops
+from repro.models.api import model_flops
 
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip

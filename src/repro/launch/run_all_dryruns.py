@@ -24,9 +24,9 @@ import os
 import subprocess
 import sys
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
-from repro.configs import REGISTRY, SHAPES, get_config, shape_applicable
+from repro.configs import SHAPES, get_config, shape_applicable
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__),
                            "../../../benchmarks/results/dryrun")

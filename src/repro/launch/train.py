@@ -10,14 +10,13 @@ here unchanged.
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import SHAPES, get_config
+from repro.configs import get_config
 from repro.launch.dryrun import apply_overrides
 from repro.launch.mesh import smoke_mesh
 from repro.models import api

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.param import Registrar, maybe_scan, shard, subtree
-from repro.models.transformer import (_Prefixed, _Stacked, _gqa_qkv, _remat)
+from repro.models.transformer import _Stacked, _gqa_qkv, _remat
 
 F32 = jnp.float32
 

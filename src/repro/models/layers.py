@@ -17,7 +17,6 @@ All softmax math in fp32; inputs/outputs in the activation dtype.
 
 from __future__ import annotations
 
-import math
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -206,7 +205,7 @@ def _xblock_attention(q, k, v, *, causal, chunk_kv, window, kv_len, scale):
     qg = q.reshape(b, sq, hkv, g, dk)
     qpos = jnp.arange(sq)[:, None] + (skv - sq if causal else 0)
     m = jnp.full((b, hkv, g, sq), -jnp.inf, F32)
-    l = jnp.zeros((b, hkv, g, sq), F32)
+    lse = jnp.zeros((b, hkv, g, sq), F32)
     acc = jnp.zeros((b, hkv, g, sq, dv), F32)
     for ki in range(nk):
         kb = k[:, ki * ck:(ki + 1) * ck]
@@ -230,11 +229,11 @@ def _xblock_attention(q, k, v, *, causal, chunk_kv, window, kv_len, scale):
         p = jnp.where(jnp.isinf(s), 0.0, p)
         corr = jnp.exp(jnp.where(jnp.isinf(m), 0.0, m) - m_safe)
         corr = jnp.where(jnp.isinf(m), 0.0, corr)
-        l = l * corr + jnp.sum(p, axis=-1)
+        lse = lse * corr + jnp.sum(p, axis=-1)
         acc = acc * corr[..., None] \
             + jnp.einsum("bhgqk,bkhe->bhgqe", p.astype(v.dtype), vb).astype(F32)
         m = m_new
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = acc / jnp.maximum(lse, 1e-30)[..., None]
     return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, dv).astype(v.dtype)
 
 
@@ -261,7 +260,7 @@ def _chunked_attention(q, k, v, *, causal, chunk_q, chunk_kv, window, kv_len,
         qpos = qi * cq + jnp.arange(cq) + off         # [cq]
 
         def kv_step(carry, kc):
-            m, l, acc = carry
+            m, lse, acc = carry
             ki, kb, vb = kc
             kpos = ki * ck + jnp.arange(ck)
             s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
@@ -280,17 +279,17 @@ def _chunked_attention(q, k, v, *, causal, chunk_q, chunk_kv, window, kv_len,
             p = jnp.where(jnp.isinf(s), 0.0, p)
             corr = jnp.exp(jnp.where(jnp.isinf(m), 0.0, m) - m_safe)
             corr = jnp.where(jnp.isinf(m), 0.0, corr)
-            l_new = l * corr + jnp.sum(p, axis=-1)
+            lse_new = lse * corr + jnp.sum(p, axis=-1)
             o = jnp.einsum("bhgqk,bkhe->bhgqe", p.astype(v.dtype), vb)
             acc_new = acc * corr[..., None] + o.astype(F32)
-            return (m_new, l_new, acc_new), None
+            return (m_new, lse_new, acc_new), None
 
         m0 = jnp.full((b, hkv, g, cq), -jnp.inf, F32)
         l0 = jnp.zeros((b, hkv, g, cq), F32)
         a0 = jnp.zeros((b, hkv, g, cq, dv), F32)
-        (m, l, acc), _ = jax.lax.scan(
+        (m, lse, acc), _ = jax.lax.scan(
             kv_step, (m0, l0, a0), (jnp.arange(nk), k_r, v_r))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = acc / jnp.maximum(lse, 1e-30)[..., None]
         return None, out
 
     _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), q_r))
@@ -318,7 +317,7 @@ def _band_attention(q, k, v, *, chunk, window, scale):
     n_bands = n if window is None else min(n, (window + c - 2) // c + 1)
 
     m = jnp.full((b, n, hkv, g, c), -jnp.inf, F32)
-    l = jnp.zeros((b, n, hkv, g, c), F32)
+    lse = jnp.zeros((b, n, hkv, g, c), F32)
     acc = jnp.zeros((b, n, hkv, g, c, dv), F32)
     qi_in = jnp.arange(c)[:, None]
     ki_in = jnp.arange(c)[None, :]
@@ -345,12 +344,13 @@ def _band_attention(q, k, v, *, chunk, window, scale):
         p = jnp.where(jnp.isinf(sco), 0.0, p)
         corr = jnp.exp(jnp.where(jnp.isinf(m_old), 0.0, m_old) - m_safe)
         corr = jnp.where(jnp.isinf(m_old), 0.0, corr)
-        l = l.at[:, band:].set(l[:, band:] * corr + jnp.sum(p, axis=-1))
+        lse = lse.at[:, band:].set(lse[:, band:] * corr
+                                   + jnp.sum(p, axis=-1))
         o = jnp.einsum("bnhgqk,bnkhe->bnhgqe", p.astype(v.dtype), vs)
         acc = acc.at[:, band:].set(acc[:, band:] * corr[..., None] + o.astype(F32))
         m = m.at[:, band:].set(m_new)
 
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = acc / jnp.maximum(lse, 1e-30)[..., None]
     out = out.transpose(0, 1, 4, 2, 3, 5).reshape(b, sp, hq, dv)
     return out[:, :s].astype(v.dtype)
 

@@ -14,7 +14,7 @@ Cache layouts (stacked over layers for scan):
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ indexed by the pre-activation's high bits — the standard FPGA mapping.
 
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

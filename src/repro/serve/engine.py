@@ -15,7 +15,6 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.gate import GateConfig, ServeGate

@@ -2,8 +2,7 @@
 
 import pytest
 
-from repro.configs import REGISTRY, SHAPES, get_config, list_archs, \
-    shape_applicable
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
 from repro.models.api import analytic_param_count, model_flops
 
 EXPECTED_ARCHS = {

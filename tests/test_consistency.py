@@ -6,7 +6,6 @@ high capacity factor so MoE drops nothing)."""
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

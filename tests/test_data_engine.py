@@ -6,15 +6,13 @@ ring = last-8 window)."""
 
 import collections
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.data_engine import engine as de
 from repro.core.data_engine.state import (EngineConfig, hash_five_tuple,
-                                          init_state, make_packets)
+                                          init_state)
 
 CFG = EngineConfig(n_slots_log2=8, ring_depth=8)
 

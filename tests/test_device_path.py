@@ -14,8 +14,7 @@ import pytest
 
 from repro.configs.fenix_models import fenix_cnn
 from repro.core.data_engine.decision_tree import fit_tree, tree_arrays
-from repro.core.data_engine.state import (EngineConfig, hash_five_tuple,
-                                          init_state)
+from repro.core.data_engine.state import EngineConfig, init_state
 from repro.core.fenix import FenixConfig, FenixSystem
 from repro.core.model_engine import delay_line as dl
 from repro.core.model_engine import vector_io as vio

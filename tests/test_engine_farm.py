@@ -140,10 +140,12 @@ def test_farm_e1_bitwise_identical_to_pipes_driver():
     model = ByLenModel()
     stream, _ = constant_len_stream(2100, 40, seed=7)   # tails included
     for num_pipes in (1, 4):
-        mk = lambda use_farm: FenixSystem(
-            FenixConfig(batch_size=256, control_plane_every=3,
-                        num_pipes=num_pipes, pipes_path=True,
-                        farm_path=use_farm), model)
+        def mk(use_farm, p=num_pipes):
+            return FenixSystem(
+                FenixConfig(batch_size=256, control_plane_every=3,
+                            num_pipes=p, pipes_path=True,
+                            farm_path=use_farm), model)
+
         _bit_identical(mk(False), mk(True), stream)
 
 
@@ -153,10 +155,12 @@ def test_farm_e1_identity_with_serve_cap():
     model = ByLenModel()
     stream, _ = constant_len_stream(2048, 32, seed=3, gap_us=40)
     ecfg = EngineConfig(fpga_hz=0.05e6, link_bw_bytes=0.05e6 * 64)
-    mk = lambda use_farm: FenixSystem(
-        FenixConfig(engine=ecfg, io=vio.IOConfig(serve_max=8),
-                    batch_size=256, num_pipes=2, pipes_path=True,
-                    farm_path=use_farm), model)
+    def mk(use_farm):
+        return FenixSystem(
+            FenixConfig(engine=ecfg, io=vio.IOConfig(serve_max=8),
+                        batch_size=256, num_pipes=2, pipes_path=True,
+                        farm_path=use_farm), model)
+
     _bit_identical(mk(False), mk(True), stream)
 
 
@@ -164,9 +168,11 @@ def test_farm_e1_identity_with_serve_cap():
 def det_farms():
     """One system per engine count, module-scoped so jits compile once."""
     model = ByLenModel()
-    mk = lambda e: FenixSystem(
-        FenixConfig(batch_size=256, control_plane_every=4, num_engines=e,
-                    farm_path=True), model)
+    def mk(e):
+        return FenixSystem(
+            FenixConfig(batch_size=256, control_plane_every=4,
+                        num_engines=e, farm_path=True), model)
+
     return mk(1), mk(ENGINES)
 
 
@@ -232,9 +238,11 @@ def test_shard_map_matches_vmap_on_engine_axis():
     stream, _ = constant_len_stream(2048, 32, seed=5)
     n_dev = jax.device_count()
     num_pipes = 2 if n_dev >= 4 else 1
-    mk = lambda: FenixSystem(FenixConfig(batch_size=256,
-                                         num_pipes=num_pipes,
-                                         num_engines=2), model)
+    def mk():
+        return FenixSystem(FenixConfig(batch_size=256,
+                                       num_pipes=num_pipes,
+                                       num_engines=2), model)
+
     s_mesh = mk()
     assert s_mesh._mesh is not None
     assert s_mesh._mesh.devices.shape == (num_pipes, 2)

@@ -1,8 +1,6 @@
 """REQUIRED per-arch smoke tests: reduced config, one forward/train step on
 CPU, assert output shapes + no NaNs.  One test per assigned architecture."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -29,24 +29,17 @@ from repro.core.data_engine.state import (EngineConfig, hash_five_tuple,
 from repro.core.fenix import FenixConfig, FenixSystem
 from repro.core.model_engine import delay_line as dl
 from repro.core.model_engine import vector_io as vio
+from repro.core.model_engine.inference import ByLenModel  # noqa: F401  (re-exported for test_engine_farm)
 
 I32 = jnp.int32
 PIPES = 4
 
 
-class ByLenModel:
-    """Deterministic stand-in Model Engine: class = F9 pkt_len mod 7.
-
-    With per-flow-constant packet lengths every feature window of a flow
-    maps to the same class, so WHAT a flow is classified as cannot depend
-    on which of its windows the rate limiter happens to sample — exactly
-    the invariant the partitioning property needs.
-    """
-
-    num_classes = 7
-
-    def infer(self, payload):
-        return (payload[:, -1, 0] % self.num_classes).astype(I32)
+# ByLenModel: with per-flow-constant packet lengths every
+# feature window of a flow maps to the same class, so WHAT a flow
+# is classified as cannot depend on which of its windows the rate
+# limiter samples — the invariant the partitioning property needs.
+# (shared deterministic stand-in, re-exported for test_engine_farm)
 
 
 def constant_len_stream(n_pkts: int, n_flows: int, seed: int,
@@ -211,9 +204,11 @@ def test_process_pipes_fast_matches_per_pipe_loop():
 def det_systems():
     """One system per layout, module-scoped so jits compile once."""
     model = ByLenModel()
-    mk = lambda p: FenixSystem(
-        FenixConfig(batch_size=256, control_plane_every=4, num_pipes=p,
-                    pipes_path=True), model)
+    def mk(p):
+        return FenixSystem(
+            FenixConfig(batch_size=256, control_plane_every=4,
+                        num_pipes=p, pipes_path=True), model)
+
     return mk(1), mk(PIPES)
 
 
@@ -298,8 +293,10 @@ def test_shard_map_matches_vmap_fallback():
     """The mesh-sharded driver and the 1-device vmap fallback agree."""
     model = ByLenModel()
     stream, _ = constant_len_stream(2048, 32, seed=5)
-    mk = lambda: FenixSystem(FenixConfig(batch_size=256, num_pipes=PIPES),
-                             model)
+    def mk():
+        return FenixSystem(FenixConfig(batch_size=256, num_pipes=PIPES),
+                           model)
+
     s_mesh = mk()
     assert s_mesh._mesh is not None
     s_vmap = mk()

@@ -1,7 +1,6 @@
 """Eq. 2 probability model + Appendix A fairness (property tests)."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.probability import (LUTConfig, build_lut, expected_period,

@@ -17,8 +17,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, list_archs
 from repro.models import api
-from repro.models.param import (DEFAULT_RULES, sharding_ctx, spec_for,
-                                tree_pspecs)
+from repro.models.param import sharding_ctx, spec_for, tree_pspecs
 
 from conftest import abstract_mesh
 

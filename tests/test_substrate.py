@@ -2,17 +2,15 @@
 
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.distributed.compression import (CompressedState,
                                            compress_decompress,
                                            dequantize_grad, quantize_grad)
 from repro.distributed.elastic import plan_remesh, scale_step_capacity
 from repro.train import checkpoint as ckpt
-from repro.train.optimizer import OptConfig, init_state, make_train_step
+from repro.train.optimizer import OptConfig
 
 
 def _toy_params(rng):

@@ -4,8 +4,6 @@ Covers: LM serving engine (float vs int8), FENIX gate integration, the
 reduced-arch training launcher path, and hypothesis ring-buffer oracle.
 """
 
-import dataclasses
-
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -72,7 +70,6 @@ def test_gated_serving(llama):
 def test_ring_buffer_oracle(depth, n, seed):
     """Ring update/assemble == collections.deque(maxlen=depth) oracle."""
     import collections
-    import jax
     from repro.core.data_engine import buffer_manager as bm
     from repro.core.data_engine.state import EngineConfig, init_state
 

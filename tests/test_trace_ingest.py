@@ -1,0 +1,355 @@
+"""Real-trace ingestion: pcap round-trip bit-identity (the subsystem's
+correctness oracle), malformed-capture errors, CSV adapter label mapping,
+and chunked-vs-whole iteration equivalence."""
+
+import io
+import os
+import struct
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data import trace_formats as tf
+from repro.data import trace_ingest as ti
+from repro.data.synthetic_traffic import (make_flows, packet_stream,
+                                          task_meta, uniform_flow_stream)
+from repro.data.trace_formats import TraceFormatError
+
+
+def _roundtrip(flows, tmp, limit=None, **kw):
+    pcap = os.path.join(tmp, "t.pcap")
+    oracle = ti.synthesize_pcap(flows, pcap, limit=limit, **kw)
+    return oracle, ti.ingest_pcap(pcap), pcap
+
+
+# ---------------------------------------------------------------------------
+# pcap round trip — the bit-identity property
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_flows=st.integers(3, 28), seed=st.integers(0, 10_000),
+       task=st.sampled_from(("iscx", "ustc")))
+def test_pcap_roundtrip_bit_identity(n_flows, seed, task):
+    """pcap -> ingest -> packet_stream == source stream, every column,
+    every dtype, bit for bit (with the ground-truth sidecar)."""
+    flows = make_flows(task, n_flows, seed=seed)
+    with tempfile.TemporaryDirectory() as tmp:
+        oracle, got, _ = _roundtrip(flows, tmp, limit=3000)
+        assert sorted(got) == sorted(oracle)
+        for k in oracle:
+            assert got[k].dtype == oracle[k].dtype, k
+            np.testing.assert_array_equal(got[k], oracle[k], err_msg=k)
+
+
+def test_pcap_roundtrip_without_sidecar():
+    flows = make_flows("iscx", 12, seed=4)
+    with tempfile.TemporaryDirectory() as tmp:
+        pcap = os.path.join(tmp, "t.pcap")
+        oracle = ti.synthesize_pcap(pcap_path=pcap, flows=flows,
+                                    labels_path=None)
+        got = ti.ingest_pcap(pcap)
+        for k in ti.PKT_COLS:       # data-plane keys still bit-identical
+            np.testing.assert_array_equal(got[k], oracle[k], err_msg=k)
+        assert (got["label"] == -1).all()
+        # first-seen flow numbering keeps per-flow positions intact
+        np.testing.assert_array_equal(got["flow_pos"], oracle["flow_pos"])
+
+
+def test_pcap_roundtrip_nanosecond_bigendian():
+    flows = make_flows("ustc", 8, seed=2)
+    with tempfile.TemporaryDirectory() as tmp:
+        pcap = os.path.join(tmp, "t.pcap")
+        oracle = packet_stream(flows, limit=800)
+        ti.write_pcap(oracle, pcap, nanos=True, byteorder=">")
+        got = ti.ingest_pcap(pcap, labels=None)
+        for k in ti.PKT_COLS:
+            np.testing.assert_array_equal(got[k], oracle[k], err_msg=k)
+
+
+def test_non_l4_protocols_lose_ports_only():
+    """Protocols without TCP/UDP headers cannot carry ports in a real
+    capture; everything else still round-trips exactly."""
+    st_ = uniform_flow_stream(1500, 40, seed=3)
+    with tempfile.TemporaryDirectory() as tmp:
+        pcap = os.path.join(tmp, "t.pcap")
+        ti.write_pcap(st_, pcap)
+        got = ti.ingest_pcap(pcap, labels=None)
+        l4 = np.isin(st_["proto"], (6, 17))
+        assert 0 < l4.sum() < len(l4)       # stream mixes both kinds
+        for k in ("ts_us", "pkt_len", "src_ip", "dst_ip", "proto"):
+            np.testing.assert_array_equal(
+                got[k], st_[k].astype(ti.STREAM_DTYPES[k]), err_msg=k)
+        for k in ("src_port", "dst_port"):
+            np.testing.assert_array_equal(got[k][l4], st_[k][l4])
+            assert (got[k][~l4] == 0).all()
+
+
+def test_epoch_timestamps_rebase_to_first_record():
+    """Real captures carry epoch microseconds far past int32; ingest
+    rebases them to the first record like packet_stream's wrap."""
+    st_ = uniform_flow_stream(64, 8, seed=1)
+    epoch = 1_700_000_000 * 1_000_000
+    shifted = dict(st_)
+    shifted["ts_us"] = st_["ts_us"].astype(np.int64) + epoch
+    with tempfile.TemporaryDirectory() as tmp:
+        pcap = os.path.join(tmp, "t.pcap")
+        ti.write_pcap(shifted, pcap)
+        got = ti.ingest_pcap(pcap, labels=None)
+        base = int(st_["ts_us"][0])
+        np.testing.assert_array_equal(
+            got["ts_us"], (st_["ts_us"] - base).astype(np.int32))
+
+
+def test_chunked_vs_whole_file_equivalence():
+    flows = make_flows("iscx", 20, seed=7)
+    with tempfile.TemporaryDirectory() as tmp:
+        pcap = os.path.join(tmp, "t.pcap")
+        ti.synthesize_pcap(flows, pcap, limit=2500)
+        whole = ti.ingest_pcap(pcap, chunk_pkts=1 << 20)
+        for chunk_pkts in (7, 64, 999):
+            part = ti.ingest_pcap(pcap, chunk_pkts=chunk_pkts)
+            for k in whole:
+                np.testing.assert_array_equal(
+                    part[k], whole[k], err_msg=f"{k}@{chunk_pkts}")
+        # sidecar-less numbering must also be chunk-size invariant
+        whole_n = ti.ingest_pcap(pcap, labels=None, chunk_pkts=1 << 20)
+        part_n = ti.ingest_pcap(pcap, labels=None, chunk_pkts=13)
+        for k in whole_n:
+            np.testing.assert_array_equal(part_n[k], whole_n[k],
+                                          err_msg=k)
+
+
+def test_ingest_limit_stops_reading():
+    flows = make_flows("iscx", 10, seed=8)
+    with tempfile.TemporaryDirectory() as tmp:
+        oracle, _, pcap = _roundtrip(flows, tmp)
+        got = ti.ingest_pcap(pcap, limit=123, chunk_pkts=50)
+        assert len(got["ts_us"]) == 123
+        for k in oracle:
+            np.testing.assert_array_equal(got[k], oracle[k][:123],
+                                          err_msg=k)
+
+
+def test_duplicate_five_tuple_rejected():
+    flows = make_flows("iscx", 4, seed=0)
+    flows[2].five_tuple = flows[0].five_tuple
+    with tempfile.TemporaryDirectory() as tmp:
+        with pytest.raises(TraceFormatError, match="share 5-tuple"):
+            ti.synthesize_pcap(flows, os.path.join(tmp, "t.pcap"))
+
+
+def test_non_l4_flow_with_ports_rejected():
+    """A flow whose protocol carries no L4 header but whose 5-tuple has
+    nonzero ports could never round-trip (write_pcap drops the ports, so
+    ingest could not match the sidecar) — synthesize must reject it
+    instead of silently corrupting flow_idx/label."""
+    flows = make_flows("iscx", 3, seed=1)
+    ft = flows[1].five_tuple
+    flows[1].five_tuple = (ft[0], ft[1], ft[2], ft[3], 1)   # ICMP + ports
+    with tempfile.TemporaryDirectory() as tmp:
+        with pytest.raises(TraceFormatError, match="only carries ports"):
+            ti.synthesize_pcap(flows, os.path.join(tmp, "t.pcap"))
+        # zero ports are fine: the wire identity is unambiguous
+        flows[1].five_tuple = (ft[0], ft[1], 0, 0, 1)
+        oracle = ti.synthesize_pcap(flows, os.path.join(tmp, "ok.pcap"))
+        got = ti.ingest_pcap(os.path.join(tmp, "ok.pcap"))
+        for k in oracle:
+            np.testing.assert_array_equal(got[k], oracle[k], err_msg=k)
+
+
+def test_load_stream_accepts_file_objects():
+    flows = make_flows("iscx", 6, seed=2)
+    with tempfile.TemporaryDirectory() as tmp:
+        pcap = os.path.join(tmp, "t.pcap")
+        oracle = ti.synthesize_pcap(flows, pcap, limit=400)
+        with open(pcap, "rb") as f:
+            got = ti.load_stream(f)
+        for k in ti.PKT_COLS:
+            np.testing.assert_array_equal(got[k], oracle[k], err_msg=k)
+        with open(pcap, "rb") as f:
+            assert len(ti.load_flows(f)) == len(
+                np.unique(oracle["flow_idx"]))
+
+
+# ---------------------------------------------------------------------------
+# malformed captures
+# ---------------------------------------------------------------------------
+
+
+def _ingest_bytes(data: bytes):
+    return ti.ingest_pcap(io.BytesIO(data), labels=None)
+
+
+def test_empty_file_is_a_clear_error():
+    with pytest.raises(TraceFormatError, match="empty pcap"):
+        _ingest_bytes(b"")
+
+
+def test_bad_magic_is_a_clear_error():
+    with pytest.raises(TraceFormatError, match="bad pcap magic"):
+        _ingest_bytes(b"\xde\xad\xbe\xef" + b"\x00" * 20)
+
+
+def test_truncated_global_header():
+    with pytest.raises(TraceFormatError, match="truncated pcap global"):
+        _ingest_bytes(b"\xd4\xc3\xb2\xa1\x02\x00")
+
+
+def test_truncated_record_header_and_body():
+    flows = make_flows("iscx", 5, seed=1)
+    with tempfile.TemporaryDirectory() as tmp:
+        _, _, pcap = _roundtrip(flows, tmp, limit=50)
+        raw = open(pcap, "rb").read()
+        with pytest.raises(TraceFormatError,
+                           match="truncated pcap record header"):
+            _ingest_bytes(raw[:24 + 6])
+        with pytest.raises(TraceFormatError,
+                           match="truncated pcap record body"):
+            _ingest_bytes(raw[:24 + 16 + 9])
+
+
+def test_unsupported_linktype():
+    hdr = struct.pack("<IHHiIII", ti.PCAP_MAGIC_US, 2, 4, 0, 0, 65535,
+                      228)          # LINKTYPE_IPV4_WITH_PHB, unsupported
+    with pytest.raises(TraceFormatError, match="unsupported pcap linktype"):
+        _ingest_bytes(hdr)
+
+
+def test_non_ip_frames_are_skipped_and_counted():
+    flows = make_flows("iscx", 6, seed=3)
+    with tempfile.TemporaryDirectory() as tmp:
+        oracle, _, pcap = _roundtrip(flows, tmp, limit=40)
+        raw = open(pcap, "rb").read()
+        # splice an ARP frame (ethertype 0x0806) after the global header
+        arp = b"\xff" * 12 + b"\x08\x06" + b"\x00" * 28
+        rec = struct.pack("<IIII", 0, 0, len(arp), len(arp))
+        stats = {}
+        got = ti.ingest_pcap(
+            io.BytesIO(raw[:24] + rec + arp + raw[24:]), labels=None,
+            stats=stats)
+        assert stats["skipped"] == 1
+        assert len(got["ts_us"]) == len(oracle["ts_us"])
+
+
+# ---------------------------------------------------------------------------
+# CSV adapters
+# ---------------------------------------------------------------------------
+
+
+def test_generic_csv_roundtrip():
+    flows = make_flows("ustc", 15, seed=6)
+    oracle = packet_stream(flows, limit=1500)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "t.csv")
+        ti.write_generic_csv(oracle, path)
+        got = packet_stream(tf.flows_from_csv(path, "generic"))
+        for k in oracle:
+            np.testing.assert_array_equal(got[k], oracle[k], err_msg=k)
+        # and through the front door / the drivers' source= selector
+        got2 = ti.load_stream(path)
+        for k in oracle:
+            np.testing.assert_array_equal(got2[k], oracle[k], err_msg=k)
+
+
+def test_label_mapping_exhaustive():
+    """Every adapter alias resolves to a valid class index, and every
+    class of the task vocabulary is reachable through some alias."""
+    for schema in (tf.ISCX_VPN, tf.USTC_TFC, tf.GENERIC):
+        for alias in schema.label_aliases:
+            idx = tf.map_label(alias, schema)
+            assert 0 <= idx < len(schema.classes), (schema.name, alias)
+        assert set(schema.label_aliases.values()) == set(schema.classes), \
+            schema.name
+    # canonical class names map to their own index, vpn- prefixed too
+    for task, schema in (("iscx", tf.ISCX_VPN), ("ustc", tf.USTC_TFC)):
+        classes, _ = task_meta(task)
+        assert schema.classes == classes
+        for i, name in enumerate(classes):
+            assert tf.map_label(name, schema) == i
+    assert tf.map_label("VPN-Chat", tf.ISCX_VPN) == 0
+    assert tf.map_label("Streaming", tf.ISCX_VPN) == 4
+
+
+def test_unknown_label_strict_vs_lenient():
+    with pytest.raises(TraceFormatError, match="known labels"):
+        tf.map_label("quic-magic", tf.ISCX_VPN)
+    assert tf.map_label("quic-magic", tf.ISCX_VPN, strict=False) == -1
+
+
+def test_iscx_vpn_flow_level_adapter():
+    text = (
+        "Src IP,Src Port,Dst IP,Dst Port,Protocol,Timestamp,"
+        "Flow Duration,Total Fwd Packets,"
+        "Total Length of Fwd Packets,Label\n"
+        "10.0.0.1,443,10.0.0.2,51000,TCP,12.5,2000000,10,14000,VPN-Chat\n"
+        "192.168.1.5,5060,10.0.0.9,5061,UDP,13.0,5000000,50,8600,VoIP\n")
+    flows = tf.flows_from_csv_text(text, "iscx_vpn")
+    assert [f.label for f in flows] == [0, 5]
+    f0 = flows[0]
+    assert f0.five_tuple == ((10 << 24) + 1, (10 << 24) + 2, 443, 51000, 6)
+    assert f0.start_us == 12_500_000
+    assert len(f0.pkt_len) == 10
+    assert int(f0.pkt_len.sum()) == 14000
+    assert int(f0.ipd_us.sum()) == 2_000_000 and f0.ipd_us[0] == 0
+    assert flows[1].five_tuple[4] == 17
+    # reconstructed flows interleave into a well-formed stream
+    stream = packet_stream(flows)
+    assert (np.diff(stream["ts_us"]) >= 0).all()
+
+
+def test_ustc_tfc_flow_level_adapter():
+    text = ("sa,sport,da,dport,protocol,first_seen,duration_ms,"
+            "pkt_count,byte_count,app\n"
+            "1,1029,2,445,tcp,1000,2500,20,30000,SMB\n"
+            "3,5555,4,80,tcp,1500,1200,8,1200,Neris\n")
+    flows = tf.flows_from_csv_text(text, "ustc_tfc")
+    classes, _ = task_meta("ustc")
+    assert [classes[f.label] for f in flows] == ["smb", "neris"]
+    assert flows[0].start_us == 1_000_000          # ms -> us
+    assert int(flows[0].ipd_us.sum()) == 2_500_000
+    assert (flows[0].pkt_len >= 40).all()          # clipped plausible IP
+
+
+def test_missing_csv_column_is_a_clear_error():
+    with pytest.raises(TraceFormatError, match="missing column"):
+        tf.flows_from_csv_text("Src IP,Dst IP\n1,2\n", "iscx_vpn")
+    with pytest.raises(TraceFormatError, match="unknown trace adapter"):
+        tf.get_adapter("netflow_v5")
+
+
+def test_flows_from_stream_inverts_packet_stream():
+    flows = make_flows("iscx", 18, seed=12)
+    oracle = packet_stream(flows)
+    back = packet_stream(ti.flows_from_stream(oracle))
+    for k in oracle:
+        np.testing.assert_array_equal(back[k], oracle[k], err_msg=k)
+
+
+def test_run_trace_source_matches_stream():
+    """The drivers' source= selector replays identically to the in-memory
+    stream (device driver, deterministic model)."""
+    import jax.numpy as jnp
+
+    from repro.core.fenix import FenixConfig, FenixSystem
+
+    class ByLen:
+        num_classes = 7
+
+        def infer(self, payload):
+            return (payload[:, -1, 0] % 7).astype(jnp.int32)
+
+    flows = make_flows("iscx", 16, seed=21)
+    with tempfile.TemporaryDirectory() as tmp:
+        pcap = os.path.join(tmp, "t.pcap")
+        oracle = ti.synthesize_pcap(flows, pcap, limit=1024)
+        v_stream = FenixSystem(FenixConfig(batch_size=256),
+                               ByLen()).run_trace(oracle)["verdict"]
+        sys_src = FenixSystem(FenixConfig(batch_size=256), ByLen())
+        v_src = sys_src.run_trace(source=pcap, limit=1024)["verdict"]
+        np.testing.assert_array_equal(v_src, v_stream)
+        with pytest.raises(ValueError, match="exactly one of"):
+            sys_src.run_trace(oracle, source=pcap)
