@@ -1,0 +1,147 @@
+"""Admission-gate microbenchmark: fused vs unfused (``--only gate``).
+
+Times ONLY the admission phase (LUT probability + threshold draw + token
+-bucket credit check) at trace-driver batch sizes, in three arrangements:
+
+  unfused   the pre-fusion arrangement: the LUT lookup computed as a
+            separate one-hot matmul beside the admission math (exactly
+            what ``gate_backend="pallas"`` used to evaluate per chunk —
+            the ``rate_gate`` kernel's contraction — followed by the
+            stand-alone bucket ops)
+  fused     one ``fused_admission`` call per chunk (ref backend: the
+            gather folded into the admission computation, the graph the
+            compiled-TPU kernel mirrors)
+  fused_pallas_us
+            the fused Pallas kernel in interpret mode — the correctness
+            / lowering path, reported for visibility (interpret mode is
+            NOT a CPU performance path)
+
+Sweep: batch {4096, 8192} x pipes {1, 2} (pipes > 1 runs the per-pipe
+admission under vmap, the sharded driver's fallback form).  Writes
+``benchmarks/results/gate.json``; the acceptance bar is fused >= 1.2x
+unfused at batch 8192.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.probability import LUTConfig, build_lut
+from repro.kernels.rate_gate.ops import fused_admission
+
+I32 = jnp.int32
+LCFG = LUTConfig()
+COST_US = 4
+CAP_US = 64 * COST_US
+
+
+def _onehot_lookup(t_i, c_i, lut):
+    """The unfused LUT gather: one-hot matmul beside the scan (the exact
+    contraction the selection-only kernel ran as a separate stage)."""
+    tb, cb = lut.shape
+    n = t_i.shape[0]
+    ti = jnp.clip(t_i >> LCFG.t_shift, 0, tb - 1)
+    ci = jnp.clip(c_i >> LCFG.c_shift, 0, cb - 1)
+    rows = jax.lax.broadcasted_iota(I32, (n, tb), 1)
+    onehot_t = (rows == ti[:, None]).astype(jnp.float32)
+    lut_rows = jax.lax.dot_general(
+        onehot_t, lut.astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    cols = jax.lax.broadcasted_iota(I32, (n, cb), 1)
+    onehot_c = (cols == ci[:, None]).astype(jnp.float32)
+    return jnp.sum(lut_rows * onehot_c, axis=-1).astype(I32)
+
+
+def _unfused(t_i, c_i, ts, rand, lut, bucket, t_last):
+    prob = _onehot_lookup(t_i, c_i, lut)
+    selected = rand < prob
+    t_ref = jnp.where(t_last == 0, ts[0], t_last)
+    credit = jnp.minimum(bucket, CAP_US) + jnp.maximum(ts - t_ref, 0)
+    spend = jnp.cumsum(jnp.where(selected, COST_US, 0))
+    granted = selected & (spend <= credit)
+    bucket_new = jnp.clip(
+        credit[-1] - jnp.sum(granted.astype(I32)) * COST_US, 0, CAP_US)
+    return granted, bucket_new.astype(I32)
+
+
+def _fused(t_i, c_i, ts, rand, lut, bucket, t_last, backend="ref"):
+    return fused_admission(t_i, c_i, ts, lut, bucket, t_last, rand16=rand,
+                           cost_us=COST_US, bucket_cap_us=CAP_US,
+                           t_shift=LCFG.t_shift, c_shift=LCFG.c_shift,
+                           prob_bits=LCFG.prob_bits, backend=backend)
+
+
+def _args(batch: int, pipes: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    shape = (pipes, batch) if pipes > 1 else (batch,)
+    t_i = jnp.asarray(rng.integers(0, 1 << 17, shape), I32)
+    c_i = jnp.asarray(rng.integers(0, 128, shape), I32)
+    ts = jnp.asarray(np.sort(rng.integers(0, 1 << 20, shape), axis=-1),
+                     I32)
+    rand = jnp.asarray(rng.integers(0, 1 << LCFG.prob_bits, shape), I32)
+    lut = jnp.asarray(build_lut(n=800, q=1.0, v=0.05, cfg=LCFG))
+    if pipes > 1:
+        lut = jnp.stack([lut] * pipes)
+        bucket = jnp.full((pipes,), CAP_US // 2, I32)
+        t_last = jnp.zeros((pipes,), I32)
+    else:
+        bucket = jnp.asarray(CAP_US // 2, I32)
+        t_last = jnp.asarray(0, I32)
+    return t_i, c_i, ts, rand, lut, bucket, t_last
+
+
+def _time(fn, args, iters: int) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)              # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def sweep(batch_sizes=(4096, 8192), pipes=(1, 2), iters: int = 50,
+          interp_iters: int = 3) -> Dict:
+    """One row per (batch, pipes) cell; fused/unfused identical outputs
+    are asserted before anything is timed."""
+    rows: List[Dict] = []
+    for p in pipes:
+        un = jax.jit(jax.vmap(_unfused) if p > 1 else _unfused)
+        fu = jax.jit(jax.vmap(_fused) if p > 1 else _fused)
+        fu_pal = jax.jit(
+            jax.vmap(lambda *a: _fused(*a, backend="pallas")) if p > 1
+            else (lambda *a: _fused(*a, backend="pallas")))
+        for b in batch_sizes:
+            args = _args(b, p)
+            g_un, b_un = un(*args)
+            g_fu, b_fu = fu(*args)
+            assert bool(jnp.all(g_un == g_fu)) and \
+                bool(jnp.all(b_un == b_fu)), "fused != unfused admission"
+            us_un = _time(un, args, iters)
+            us_fu = _time(fu, args, iters)
+            us_pal = _time(fu_pal, args, interp_iters)
+            rows.append({
+                "batch_size": b, "num_pipes": p,
+                "unfused_us": round(us_un, 2),
+                "fused_us": round(us_fu, 2),
+                "fused_pallas_interpret_us": round(us_pal, 2),
+                "speedup_fused": round(us_un / us_fu, 3),
+                "granted": int(jnp.sum(g_fu.astype(I32))),
+            })
+    at_8192 = [r for r in rows if r["batch_size"] == 8192
+               and r["num_pipes"] == 1]
+    return {
+        "cost_us": COST_US, "bucket_cap_us": CAP_US,
+        "lut_bins": [LCFG.t_bins, LCFG.c_bins],
+        "rows": rows,
+        "speedup_at_8192": at_8192[0]["speedup_fused"] if at_8192 else None,
+        "note": "unfused = one-hot-matmul LUT lookup beside the "
+                "admission ops (the pre-fusion gate_backend='pallas' "
+                "graph); fused = single fused_admission call; interpret "
+                "timing is the correctness path, not a CPU perf path",
+    }

@@ -10,6 +10,17 @@ is compared against the freshly written ``benchmarks/results/`` document:
   f1 metrics (macro-F1)                    fail when they drop more than
                                            ``--f1-tol`` (default 0.05)
                                            absolute
+  point metrics (test coverage %)          fail when they drop more than
+                                           ``--cov-tol`` (default 5.0)
+                                           points absolute — the soft
+                                           coverage floor.  Gated (and
+                                           rebaselined) ONLY when named:
+                                           ``--files coverage.json``
+                                           [--rebaseline]; the default
+                                           run covers the benchmark
+                                           files only, since coverage
+                                           comes from the pytest --cov
+                                           CI leg, not benchmarks.run
 
 A diff summary (metric, baseline, current, delta, verdict) is printed to
 the job log either way; the exit code gates the build.  Metrics/files in
@@ -30,7 +41,7 @@ import json
 import os
 import shutil
 import sys
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 BASELINE = os.path.join(RESULTS, "baseline")
@@ -69,12 +80,27 @@ def _metrics_accuracy(doc) -> List[Metric]:
     return out
 
 
+def _metrics_coverage(doc) -> List[Metric]:
+    # accepts both the raw coverage.py JSON report ({"totals":
+    # {"percent_covered": X}}) and a hand-rolled {"percent_covered": X}
+    pct = doc.get("totals", doc).get("percent_covered")
+    return [] if pct is None else [("percent_covered", "points",
+                                    float(pct))]
+
+
 EXTRACTORS = {
     "throughput.json": _metrics_throughput,
     "engines.json": _metrics_engines,
     "traces.json": _metrics_traces,
     "accuracy.json": _metrics_accuracy,
+    "coverage.json": _metrics_coverage,
 }
+
+# gated / rebaselined ONLY when named via --files: coverage.json is
+# produced by the pytest --cov CI leg, never by benchmarks.run, so the
+# default invocation (after a benchmark run) must neither fail on its
+# absence nor clobber its committed floor with a stale local report
+EXPLICIT_ONLY = {"coverage.json"}
 
 
 def _load(path):
@@ -83,12 +109,19 @@ def _load(path):
 
 
 def compare(results_dir: str = RESULTS, baseline_dir: str = BASELINE,
-            pps_tol: float = 0.20, f1_tol: float = 0.05
+            pps_tol: float = 0.20, f1_tol: float = 0.05,
+            cov_tol: float = 5.0, files: Optional[List[str]] = None
             ) -> Tuple[List[Dict], int]:
-    """-> (rows, n_failures).  One row per gated metric."""
+    """-> (rows, n_failures).  One row per gated metric.  ``files``
+    restricts the gate to a subset of result files (the coverage gate
+    runs in a job that produces only coverage.json); the default set
+    excludes the EXPLICIT_ONLY files."""
     rows: List[Dict] = []
     failures = 0
     for fname, extract in sorted(EXTRACTORS.items()):
+        if (fname not in files) if files is not None \
+                else (fname in EXPLICIT_ONLY):
+            continue
         base_path = os.path.join(baseline_dir, fname)
         if not os.path.exists(base_path):
             continue                       # nothing committed: not gated
@@ -114,6 +147,10 @@ def compare(results_dir: str = RESULTS, baseline_dir: str = BASELINE,
                 drop = (bval - cval) / max(bval, 1e-12)
                 ok = drop <= pps_tol
                 delta = f"{-drop:+.1%}"
+            elif kind == "points":
+                drop = bval - cval
+                ok = drop <= cov_tol
+                delta = f"{-drop:+.1f}pt"
             else:
                 drop = bval - cval
                 ok = drop <= f1_tol
@@ -125,10 +162,16 @@ def compare(results_dir: str = RESULTS, baseline_dir: str = BASELINE,
     return rows, failures
 
 
-def rebaseline(results_dir: str = RESULTS,
-               baseline_dir: str = BASELINE) -> None:
+def rebaseline(results_dir: str = RESULTS, baseline_dir: str = BASELINE,
+               files: Optional[List[str]] = None) -> None:
+    """Copy current gated results over the baseline — honoring the same
+    ``--files`` subset as the gate, and never touching an EXPLICIT_ONLY
+    baseline (e.g. the coverage floor) unless it is named."""
     os.makedirs(baseline_dir, exist_ok=True)
     for fname in EXTRACTORS:
+        if (fname not in files) if files is not None \
+                else (fname in EXPLICIT_ONLY):
+            continue
         src = os.path.join(results_dir, fname)
         if os.path.exists(src):
             shutil.copyfile(src, os.path.join(baseline_dir, fname))
@@ -145,14 +188,30 @@ def main(argv=None) -> int:
     ap.add_argument("--f1-tol", type=float, default=float(
         os.environ.get("REGRESSION_F1_TOL", 0.05)),
         help="max absolute drop for macro-F1 metrics (default 0.05)")
+    ap.add_argument("--cov-tol", type=float, default=float(
+        os.environ.get("REGRESSION_COV_TOL", 5.0)),
+        help="max absolute drop (points) for coverage (default 5.0)")
+    ap.add_argument("--files", default=None,
+                    help="comma-separated subset of result files to gate "
+                         "(e.g. coverage.json); default: all committed")
     ap.add_argument("--rebaseline", action="store_true",
                     help="copy current gated results over the baseline")
     args = ap.parse_args(argv)
+    file_subset = None
+    if args.files:
+        file_subset = [f.strip() for f in args.files.split(",") if f.strip()]
+        unknown = sorted(set(file_subset) - set(EXTRACTORS))
+        if unknown:
+            # a typo'd --files would otherwise gate nothing and exit 0
+            ap.error(f"unknown --files entr{'ies' if len(unknown) > 1 else 'y'}: "
+                     f"{', '.join(unknown)}; known: "
+                     f"{', '.join(sorted(EXTRACTORS))}")
     if args.rebaseline:
-        rebaseline(args.results, args.baseline)
+        rebaseline(args.results, args.baseline, files=file_subset)
         return 0
     rows, failures = compare(args.results, args.baseline,
-                             pps_tol=args.pps_tol, f1_tol=args.f1_tol)
+                             pps_tol=args.pps_tol, f1_tol=args.f1_tol,
+                             cov_tol=args.cov_tol, files=file_subset)
     if not rows:
         print(f"no baseline files under {args.baseline}; nothing gated")
         return 0

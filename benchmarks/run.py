@@ -36,7 +36,7 @@ from benchmarks._io import write_json_atomic
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
-SECTIONS = ("throughput", "pipes", "engines", "oversub", "traces",
+SECTIONS = ("throughput", "gate", "pipes", "engines", "oversub", "traces",
             "accuracy", "resource", "scalability", "latency", "fairness",
             "roofline")
 
@@ -73,6 +73,18 @@ def main() -> None:
         _row("fastpath_throughput", res["segment"]["us_per_batch"],
              f"pps={res['segment']['pps']:.0f};"
              f"speedup_vs_dense={res['speedup_vs_dense']:.1f}x")
+
+    if want("gate"):
+        from benchmarks import bench_gate
+        iters, interp = (20, 1) if args.fast else (50, 3)
+        res = bench_gate.sweep(iters=iters, interp_iters=interp)
+        write_json_atomic(os.path.join(RESULTS, "gate.json"), res)
+        for r in res["rows"]:
+            _row(f"gate_b{r['batch_size']}_p{r['num_pipes']}",
+                 r["fused_us"],
+                 f"unfused_us={r['unfused_us']};"
+                 f"speedup_fused={r['speedup_fused']:.2f}x;"
+                 f"granted={r['granted']}")
 
     if want("pipes"):
         from benchmarks import bench_scalability

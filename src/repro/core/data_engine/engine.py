@@ -101,34 +101,16 @@ def process_batch_fast(state: Dict, packets: Dict, cfg: EngineConfig
     c_i = jnp.maximum(state["bklog_n"][slot], 0) + run
     key, sub = jax.random.split(state["rng_key"])
     rand = jax.random.randint(sub, (n,), 0, 1 << cfg.lut.prob_bits, I32)
-    if cfg.gate_backend == "ref":
-        ti_bin = jnp.clip(t_i >> cfg.lut.t_shift, 0, cfg.lut.t_bins - 1)
-        ci_bin = jnp.clip(c_i >> cfg.lut.c_shift, 0, cfg.lut.c_bins - 1)
-        prob = state["lut"][ti_bin, ci_bin]
-        selected = rand < prob
-    else:
-        from repro.kernels.rate_gate.ops import rate_gate
-        selected = rate_gate(t_i, c_i, state["lut"], rand16=rand,
-                             seed=rand[0], t_shift=cfg.lut.t_shift,
-                             c_shift=cfg.lut.c_shift,
-                             prob_bits=cfg.lut.prob_bits,
-                             backend=cfg.gate_backend)
-    # bucket: spend_i <= burst credit (capped at batch start) + refill_i.
-    # The cap limits *idle accumulation*, not throughput: refill earned
-    # during the batch is spendable immediately (matches the scan semantics
-    # whenever packet timestamps are spread out; see test_data_engine).
-    first = state["t_last"] == 0
-    t_ref = jnp.where(first, ts[0], state["t_last"])
-    refill = jnp.maximum(ts - t_ref, 0)
-    burst0 = jnp.minimum(state["bucket"], cfg.bucket_cap_us)
-    credit = burst0 + refill
-    spend = jnp.cumsum(jnp.where(selected, cfg.cost_us, 0))
-    granted = selected & (spend <= credit)
+    # fused admission: LUT lookup + threshold + token bucket in ONE call
+    # (rl.admit_batch -> fused_admission).  Bucket semantics: spend_i <=
+    # burst credit (capped at batch start) + refill_i.  The cap limits
+    # *idle accumulation*, not throughput: refill earned during the batch
+    # is spendable immediately (matches the scan semantics whenever packet
+    # timestamps are spread out; see test_data_engine).
+    granted, bucket_new = rl.admit_batch(state, cfg, t_i, c_i, ts, rand)
     state = dict(state)
     state["rng_key"] = key
-    state["bucket"] = jnp.clip(
-        credit[-1] - jnp.sum(granted.astype(I32)) * cfg.cost_us,
-        0, cfg.bucket_cap_us).astype(I32)
+    state["bucket"] = bucket_new
     state["t_last"] = ts[-1]
     state["granted"] = state["granted"] + granted.sum().astype(I32)
     # features + mirror payloads from the PRE-update ring (F1..F8 then F9);

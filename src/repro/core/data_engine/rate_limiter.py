@@ -33,16 +33,17 @@ def step(state: Dict, cfg: EngineConfig, slot, ts) -> Tuple[Dict, jax.Array]:
     gap = jnp.where(first, 0, ts - state["t_last"])
     s["t_last"] = ts.astype(I32)
     bucket = jnp.minimum(state["bucket"] + gap, cfg.bucket_cap_us)
-    # line 6: rand + LUT probability on (T_i, C_i)
+    # line 6: rand + LUT probability on (T_i, C_i) — same shift/clip/gather
+    # as the batch paths (lut_prob is the single lookup site)
+    from repro.kernels.rate_gate.ref import lut_prob
+
     key, sub = jax.random.split(state["rng_key"])
     s["rng_key"] = key
     rand = jax.random.randint(sub, (), 0, 1 << cfg.lut.prob_bits, I32)
     t_i = jnp.maximum(ts - state["bklog_t"][slot], 0)
     c_i = jnp.maximum(state["bklog_n"][slot], 0)
-    ti_bin = jnp.clip(t_i >> cfg.lut.t_shift, 0, cfg.lut.t_bins - 1)
-    ci_bin = jnp.clip(c_i >> cfg.lut.c_shift, 0, cfg.lut.c_bins - 1)
-    prob = state["lut"][ti_bin, ci_bin]
-    selected = rand < prob
+    selected = rand < lut_prob(state["lut"], t_i, c_i, cfg.lut.t_shift,
+                               cfg.lut.c_shift)
     # lines 8-12: consume if selected and enough tokens
     has_tokens = bucket >= cfg.cost_us
     granted = selected & has_tokens
@@ -57,6 +58,29 @@ def step(state: Dict, cfg: EngineConfig, slot, ts) -> Tuple[Dict, jax.Array]:
     s["bklog_t"] = s["bklog_t"].at[slot].set(
         jnp.where(granted, ts, s["bklog_t"][slot]))
     return s, granted
+
+
+def admit_batch(state: Dict, cfg: EngineConfig, t_i: jax.Array,
+                c_i: jax.Array, ts: jax.Array, rand16: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Vectorized Algorithm 1 for one packet batch: ONE fused call.
+
+    LUT lookup, threshold draw, and the prefix-sum token-bucket credit
+    check run as a single op against the state's LUT and bucket registers
+    — the jnp oracle when ``cfg.gate_backend == "ref"``, the fused Pallas
+    kernel otherwise (bit-identical in interpret mode; the TPU backend
+    swaps the host-supplied draws for the on-core PRNG).  Returns
+    (granted [n] bool, bucket_new scalar); the caller owns the rest of
+    the state update (t_last, counters) exactly as before.
+    """
+    from repro.kernels.rate_gate.ops import fused_admission
+
+    return fused_admission(
+        t_i, c_i, ts, state["lut"], state["bucket"], state["t_last"],
+        rand16=rand16, cost_us=cfg.cost_us,
+        bucket_cap_us=cfg.bucket_cap_us, t_shift=cfg.lut.t_shift,
+        c_shift=cfg.lut.c_shift, prob_bits=cfg.lut.prob_bits,
+        backend=cfg.gate_backend)
 
 
 def control_plane_update(state: Dict, cfg: EngineConfig) -> Dict:

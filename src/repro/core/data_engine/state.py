@@ -47,10 +47,13 @@ class EngineConfig:
     queue_len: int = 64             # bucket cap <= queue length (§4.2)
     window_us: int = 1_000_000      # T_w statistics window
     lut: LUTConfig = dataclasses.field(default_factory=LUTConfig)
-    # probability-gate backend for the vectorized fast path:
-    #   "ref"        inline jnp LUT lookup (bit-exact with the scan mode)
-    #   "pallas"     rate_gate Pallas kernel, interpret mode (CPU fallback)
-    #   "pallas_tpu" compiled Pallas kernel with the on-core PRNG
+    # probability-gate backend for the vectorized fast path — the FUSED
+    # admission op (LUT lookup + threshold + token bucket, one call per
+    # chunk; see kernels/rate_gate/ops.fused_admission):
+    #   "ref"        pure-jnp oracle (bit-exact with the scan mode)
+    #   "pallas"     fused Pallas kernel, interpret mode (CPU fallback,
+    #                bit-identical to "ref")
+    #   "pallas_tpu" compiled fused Pallas kernel with the on-core PRNG
     gate_backend: str = "ref"
     # use the O(n^2) dense backlog count instead of the sort/segment path
     # (reference implementation, kept for tests and the throughput bench)

@@ -111,6 +111,12 @@ class FenixConfig:
     # None: farm driver iff num_engines > 1.  True forces it at
     # num_engines=1 (bit-identical to the pipes driver; tests/benchmarks).
     farm_path: Optional[bool] = None
+    # probability-gate backend override for EVERY driver path (host loop,
+    # single-device scan, pipes, farm): "ref" | "pallas" | "pallas_tpu".
+    # None keeps engine.gate_backend; a string replaces it, and the
+    # derived per-pipe / pooled-farm configs inherit it, so one knob
+    # switches the whole data plane.
+    gate_backend: Optional[str] = None
 
 
 def pipe_mesh(num_pipes: int) -> Optional[Mesh]:
@@ -267,7 +273,12 @@ def _make_pipes_step(cfg: "FenixConfig", lcfg: EngineConfig, model, tree,
 
         stage = shard_map(shard_body, mesh=mesh,
                           in_specs=PartitionSpec("pipe"),
-                          out_specs=PartitionSpec("pipe"))
+                          out_specs=PartitionSpec("pipe"),
+                          # pallas_call (the fused rate gate) has no
+                          # replication rule; every spec here is fully
+                          # partitioned over "pipe" anyway, so the static
+                          # replication checker adds nothing
+                          check_rep=False)
     else:
         stage = jax.vmap(pipe_step, axis_name="pipe")
 
@@ -295,6 +306,13 @@ class FenixSystem:
                  tree: Optional[Dict] = None, tree_depth: int = 4,
                  oracle_windows: Optional[List[np.ndarray]] = None,
                  n_est: float = 1000.0, q_est_pps: float = 1e6):
+        from repro.kernels.rate_gate.ops import validate_backend
+
+        if cfg.gate_backend is not None:
+            cfg = dataclasses.replace(
+                cfg, engine=dataclasses.replace(
+                    cfg.engine, gate_backend=cfg.gate_backend))
+        validate_backend(cfg.engine.gate_backend)
         self.cfg = cfg
         self.model = model
         self.tree = tree

@@ -1,8 +1,19 @@
-"""Pallas TPU kernel: Rate-Limiter probability gate over a packet tile.
+"""Pallas TPU kernels: Rate-Limiter gate over packet tiles (§4.2).
 
-Data-Engine hot spot (§4.2): per-packet probability lookup + random
-threshold, vectorized over packet tiles.  The LUT stays VMEM-resident (the
-"SRAM" of the switch); the lookup is computed as a one-hot matmul —
+Two generations of the Data-Engine hot spot live here:
+
+* ``rate_gate_pallas`` — the original *selection-only* kernel: per-packet
+  probability lookup + random threshold.  The token-bucket credit check
+  stayed outside as separate XLA ops (the "LUT gather beside the scan").
+* ``fused_gate_pallas`` — the fused admission kernel: LUT lookup,
+  threshold draw, AND the prefix-sum token-bucket credit check in one
+  ``pallas_call`` per chunk.  The bucket state rides in SMEM scalars, the
+  running spend / grant totals carry across the (sequential) grid in SMEM
+  scratch, and the kernel emits the grant mask plus the updated bucket
+  level directly — admission is one kernel call, nothing runs beside it.
+
+The LUT stays VMEM-resident (the "SRAM" of the switch); the lookup is
+computed as a one-hot matmul —
 
     prob = (onehot(ti) @ LUT) . onehot(ci)   row-wise
 
@@ -97,3 +108,122 @@ def rate_gate_pallas(t_i: jax.Array, c_i: jax.Array, lut: jax.Array,
         out_shape=jax.ShapeDtypeStruct((n,), I32),
         interpret=interpret,
     )(t_i, c_i, lut, rand16)
+
+
+# ---------------------------------------------------------------------------
+# fused admission: LUT lookup + threshold + token bucket, one kernel call
+# ---------------------------------------------------------------------------
+#
+# SMEM scalar layout (the bucket state "refs" of the fused kernel):
+#   scal[0] = burst0   bucket credit at batch start, capped at bucket_cap_us
+#   scal[1] = t_ref    refill anchor: ts[0] on first batch else t_last
+#   scal[2] = n_valid  real packet count (tiles past it are padding)
+#   scal[3] = seed     PRNG seed (TPU on-core PRNG variant only)
+#
+# SMEM scratch carry across the sequential grid:
+#   carry[0] = cumulative *selected* spend (the prefix-sum credit check)
+#   carry[1] = cumulative *granted* count  (the bucket-level update)
+
+def _fused_body(i, selected, ts, scal_ref, o_ref, bucket_ref, carry_ref,
+                *, tile: int, cost_us: int, bucket_cap_us: int):
+    """Shared admission tail: credit check + bucket level, carried in SMEM."""
+
+    @pl.when(i == 0)
+    def _():
+        carry_ref[0] = 0
+        carry_ref[1] = 0
+
+    idx = i * tile + jax.lax.broadcasted_iota(I32, (tile, 1), 0)[:, 0]
+    valid = idx < scal_ref[2]
+    selected = selected & valid
+    credit = scal_ref[0] + jnp.maximum(ts - scal_ref[1], 0)
+    spend = carry_ref[0] + jnp.cumsum(
+        jnp.where(selected, cost_us, 0).astype(I32))
+    granted = selected & (spend <= credit)
+    o_ref[...] = granted.astype(I32)
+    carry_ref[0] = spend[tile - 1]
+    carry_ref[1] = carry_ref[1] + jnp.sum(granted.astype(I32))
+    # every step overwrites; the (sequential) last tile's value is final —
+    # its credit[-1] is the batch-end credit because ts pads with ts[n-1]
+    bucket_ref[0] = jnp.clip(credit[tile - 1] - carry_ref[1] * cost_us,
+                             0, bucket_cap_us).astype(I32)
+
+
+def _kernel_fused_randin(scal_ref, t_ref, c_ref, ts_ref, r_ref, lut_ref,
+                         o_ref, bucket_ref, carry_ref, *, t_shift: int,
+                         c_shift: int, prob_bits: int, cost_us: int,
+                         bucket_cap_us: int, tile: int):
+    i = pl.program_id(0)
+    prob = _lut_lookup(t_ref[...], c_ref[...], lut_ref, t_shift, c_shift)
+    selected = r_ref[...] < prob
+    _fused_body(i, selected, ts_ref[...], scal_ref, o_ref, bucket_ref,
+                carry_ref, tile=tile, cost_us=cost_us,
+                bucket_cap_us=bucket_cap_us)
+
+
+def _kernel_fused_prng(scal_ref, t_ref, c_ref, ts_ref, lut_ref,
+                       o_ref, bucket_ref, carry_ref, *, t_shift: int,
+                       c_shift: int, prob_bits: int, cost_us: int,
+                       bucket_cap_us: int, tile: int):
+    i = pl.program_id(0)
+    prob = _lut_lookup(t_ref[...], c_ref[...], lut_ref, t_shift, c_shift)
+    pltpu.prng_seed(scal_ref[3] + i)
+    bits = pltpu.prng_random_bits((tile,))
+    rand16 = jnp.bitwise_and(bits.astype(jnp.uint32),
+                             jnp.uint32((1 << prob_bits) - 1)).astype(I32)
+    selected = rand16 < prob
+    _fused_body(i, selected, ts_ref[...], scal_ref, o_ref, bucket_ref,
+                carry_ref, tile=tile, cost_us=cost_us,
+                bucket_cap_us=bucket_cap_us)
+
+
+@functools.partial(jax.jit, static_argnames=("t_shift", "c_shift",
+                                             "prob_bits", "cost_us",
+                                             "bucket_cap_us", "tile",
+                                             "interpret", "use_tpu_prng"))
+def fused_gate_pallas(t_i: jax.Array, c_i: jax.Array, ts: jax.Array,
+                      lut: jax.Array, scal: jax.Array,
+                      rand16: jax.Array = None,
+                      t_shift: int = 10, c_shift: int = 0,
+                      prob_bits: int = 16, cost_us: int = 1,
+                      bucket_cap_us: int = 64, tile: int = 256,
+                      interpret: bool = True,
+                      use_tpu_prng: bool = False):
+    """Fused admission over a padded batch.
+
+    t_i/c_i/ts[/rand16] [N] int32 (N % tile == 0, pads masked by
+    scal[2]); lut [TB, CB] int32; scal [4] int32 per the layout above.
+    Returns (granted [N] int32, bucket_new [1] int32).
+    """
+    n = t_i.shape[0]
+    assert n % tile == 0, (n, tile)
+    grid = (n // tile,)
+    tile_spec = pl.BlockSpec((tile,), lambda i: (i,))
+    lut_spec = pl.BlockSpec(lut.shape, lambda i: (0, 0))
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    kw = dict(t_shift=t_shift, c_shift=c_shift, prob_bits=prob_bits,
+              cost_us=cost_us, bucket_cap_us=bucket_cap_us, tile=tile)
+    out_shape = (jax.ShapeDtypeStruct((n,), I32),
+                 jax.ShapeDtypeStruct((1,), I32))
+    scratch = [pltpu.SMEM((2,), I32)]
+    if use_tpu_prng:
+        return pl.pallas_call(
+            functools.partial(_kernel_fused_prng, **kw),
+            grid=grid,
+            in_specs=[smem, tile_spec, tile_spec, tile_spec, lut_spec],
+            out_specs=(tile_spec, smem),
+            out_shape=out_shape,
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )(scal.astype(I32), t_i, c_i, ts, lut)
+    assert rand16 is not None
+    return pl.pallas_call(
+        functools.partial(_kernel_fused_randin, **kw),
+        grid=grid,
+        in_specs=[smem, tile_spec, tile_spec, tile_spec, tile_spec,
+                  lut_spec],
+        out_specs=(tile_spec, smem),
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(scal.astype(I32), t_i, c_i, ts, rand16, lut)

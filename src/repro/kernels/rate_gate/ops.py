@@ -1,27 +1,48 @@
-"""jit'd wrapper for the rate gate: backend switch, padding, rand supply.
+"""jit'd wrappers for the rate gate: backend switch, padding, rand supply.
 
-In ``ref`` mode the caller supplies random bits (jax.random) so results are
-bit-exact reproducible; in pallas modes the on-core PRNG generates them.
-The *selection* distribution is identical (uniform 16-bit threshold).
+Two entry points:
+
+* ``rate_gate`` — the legacy selection-only op (LUT lookup + threshold);
+  kept as the unfused half for benchmarks and the kernel sweep tests.
+* ``fused_admission`` — the fused op the Data Engine actually calls: LUT
+  lookup + threshold + token-bucket credit check in ONE call, returning
+  the grant mask and the updated bucket level.  ``backend="ref"`` is the
+  pure-jnp oracle (bit-exact with the historical inline math); the pallas
+  backends run the fused kernel (interpret on CPU, compiled + on-core
+  PRNG on TPU).
+
+In ``ref``/``pallas`` modes the caller supplies random bits (jax.random)
+so results are bit-exact reproducible; in ``pallas_tpu`` mode the on-core
+PRNG generates them.  The *selection* distribution is identical (uniform
+16-bit threshold).
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.rate_gate.kernel import rate_gate_pallas
-from repro.kernels.rate_gate.ref import rate_gate_ref
+from repro.kernels.rate_gate.kernel import fused_gate_pallas, rate_gate_pallas
+from repro.kernels.rate_gate.ref import fused_admission_ref, rate_gate_ref
+
+GATE_BACKENDS = ("ref", "pallas", "pallas_tpu")
 
 _BACKEND = "ref"
+_TILE = 256
+
+
+def validate_backend(name: str) -> str:
+    if name not in GATE_BACKENDS:
+        raise ValueError(f"unknown gate_backend {name!r}; "
+                         f"expected one of {GATE_BACKENDS}")
+    return name
 
 
 def set_backend(name: str) -> None:
     global _BACKEND
-    assert name in ("ref", "pallas", "pallas_tpu")
-    _BACKEND = name
+    _BACKEND = validate_backend(name)
 
 
 def rate_gate(t_i: jax.Array, c_i: jax.Array, lut: jax.Array,
@@ -29,12 +50,12 @@ def rate_gate(t_i: jax.Array, c_i: jax.Array, lut: jax.Array,
               seed: Optional[jax.Array] = None,
               t_shift: int = 10, c_shift: int = 0, prob_bits: int = 16,
               backend: Optional[str] = None) -> jax.Array:
-    backend = backend or _BACKEND
+    backend = validate_backend(backend or _BACKEND)
     n = t_i.shape[0]
     if backend == "ref":
         assert rand16 is not None
         return rate_gate_ref(t_i, c_i, lut, rand16, t_shift, c_shift)
-    tile = 256
+    tile = _TILE
     pad = (-n) % tile
     if pad:
         t_i = jnp.pad(t_i, (0, pad))
@@ -54,3 +75,80 @@ def rate_gate(t_i: jax.Array, c_i: jax.Array, lut: jax.Array,
                            interpret=(backend == "pallas"),
                            use_tpu_prng=use_tpu_prng)
     return sel[:n].astype(bool)
+
+
+def fused_admission(t_i: jax.Array, c_i: jax.Array, ts: jax.Array,
+                    lut: jax.Array, bucket: jax.Array, t_last: jax.Array,
+                    *, rand16: Optional[jax.Array] = None,
+                    seed: Optional[jax.Array] = None,
+                    cost_us: int, bucket_cap_us: int,
+                    t_shift: int = 10, c_shift: int = 0,
+                    prob_bits: int = 16,
+                    backend: Optional[str] = None,
+                    interpret: Optional[bool] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One fused admission call per chunk: (granted [n] bool, bucket' i32).
+
+    ``bucket``/``t_last`` are the batch-start token-bucket registers; the
+    refill anchor and the burst cap are derived here exactly as the
+    historical inline math did, so ``backend="ref"`` is bit-identical to
+    the pre-fusion Data Engine.  ``interpret`` overrides the pallas
+    interpret flag (the CPU lowering probe passes False explicitly).
+    """
+    backend = validate_backend(backend or _BACKEND)
+    n = t_i.shape[0]
+    t_ref = jnp.where(t_last == 0, ts[0], t_last).astype(jnp.int32)
+    burst0 = jnp.minimum(bucket, bucket_cap_us).astype(jnp.int32)
+    if backend == "ref":
+        assert rand16 is not None
+        return fused_admission_ref(t_i, c_i, ts, lut, rand16, burst0,
+                                   t_ref, t_shift, c_shift, cost_us,
+                                   bucket_cap_us)
+    tile = _TILE
+    pad = (-n) % tile
+    if pad:
+        t_i = jnp.pad(t_i, (0, pad))
+        c_i = jnp.pad(c_i, (0, pad))
+        # pads keep the final timestamp so the last tile's credit — the
+        # bucket-level update — is the true batch-end credit
+        ts = jnp.pad(ts, (0, pad), mode="edge")
+    use_tpu_prng = backend == "pallas_tpu"
+    if not use_tpu_prng:
+        assert rand16 is not None
+        if pad:
+            rand16 = jnp.pad(rand16, (0, pad))
+    seed = (seed if seed is not None
+            else (rand16[0] if rand16 is not None
+                  else jnp.zeros((), jnp.int32)))
+    scal = jnp.stack([burst0, t_ref, jnp.asarray(n, jnp.int32),
+                      jnp.asarray(seed, jnp.int32)])
+    granted, bucket_new = fused_gate_pallas(
+        t_i, c_i, ts, lut, scal, rand16=rand16,
+        t_shift=t_shift, c_shift=c_shift, prob_bits=prob_bits,
+        cost_us=cost_us, bucket_cap_us=bucket_cap_us, tile=tile,
+        interpret=(backend == "pallas" if interpret is None else interpret),
+        use_tpu_prng=use_tpu_prng)
+    return granted[:n].astype(bool), bucket_new[0]
+
+
+def gate_lowering_supported() -> Tuple[bool, str]:
+    """Probe whether the fused kernel compiles (interpret=False) on the
+    default jax backend.
+
+    Returns (supported, detail).  TPU hosts compile for real; most CPU
+    jaxlibs have no non-interpret Pallas lowering and report the failure
+    reason instead — the CI lowering job turns that into an explicit
+    skip marker rather than a silent interpret fallback.
+    """
+    try:
+        n = _TILE
+        granted, bucket = fused_admission(
+            jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32),
+            jnp.zeros((n,), jnp.int32), jnp.zeros((4, 4), jnp.int32),
+            jnp.asarray(8, jnp.int32), jnp.asarray(0, jnp.int32),
+            rand16=jnp.zeros((n,), jnp.int32), cost_us=1,
+            bucket_cap_us=8, backend="pallas", interpret=False)
+        jax.block_until_ready((granted, bucket))
+        return True, f"compiled on {jax.default_backend()}"
+    except Exception as e:  # noqa: BLE001 — any lowering failure is a skip
+        return False, f"{type(e).__name__}: {e}"

@@ -1,21 +1,65 @@
-"""Pure-jnp oracle for the Rate-Limiter gate (LUT lookup + threshold).
+"""Pure-jnp oracles for the Rate-Limiter gate (§4.2, Algorithm 1).
 
-The vectorizable core of Algorithm 1 lines 6-8: bin (T_i, C_i) with shifts,
-look up the probability, compare with a uniform 16-bit draw.
+``rate_gate_ref`` is the selection-only core of lines 6-8: bin (T_i, C_i)
+with shifts, look up the probability, compare with a uniform 16-bit draw.
+
+``fused_admission_ref`` is the numerics oracle for the *fused* admission
+kernel: selection plus the prefix-sum token-bucket credit check and the
+bucket-level update, in exactly the integer op order the vectorized fast
+path has always used — the Pallas kernel must be bit-identical to this
+(asserted in tests/test_fused_gate.py).
 """
 
 from __future__ import annotations
 
+from typing import Tuple
+
 import jax
 import jax.numpy as jnp
+
+I32 = jnp.int32
+
+
+def lut_prob(lut: jax.Array, t_i: jax.Array, c_i: jax.Array,
+             t_shift: int, c_shift: int) -> jax.Array:
+    """Shared binning + gather: the switch's shift/clip/SRAM-read.
+
+    Works on scalars (the per-packet scan in rate_limiter.step) and on
+    [N] batches (the vectorized fast path) alike.
+    """
+    tb, cb = lut.shape
+    ti = jnp.clip(t_i >> t_shift, 0, tb - 1)
+    ci = jnp.clip(c_i >> c_shift, 0, cb - 1)
+    return lut[ti, ci]
 
 
 def rate_gate_ref(t_i: jax.Array, c_i: jax.Array, lut: jax.Array,
                   rand16: jax.Array, t_shift: int, c_shift: int
                   ) -> jax.Array:
     """t_i/c_i/rand16 [N] int32; lut [TB,CB] int32 -> selected [N] bool."""
-    tb, cb = lut.shape
-    ti = jnp.clip(t_i >> t_shift, 0, tb - 1)
-    ci = jnp.clip(c_i >> c_shift, 0, cb - 1)
-    prob = lut[ti, ci]
-    return rand16 < prob
+    return rand16 < lut_prob(lut, t_i, c_i, t_shift, c_shift)
+
+
+def fused_admission_ref(t_i: jax.Array, c_i: jax.Array, ts: jax.Array,
+                        lut: jax.Array, rand16: jax.Array,
+                        burst0: jax.Array, t_ref: jax.Array,
+                        t_shift: int, c_shift: int, cost_us: int,
+                        bucket_cap_us: int
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Fused admission oracle: (granted [N] bool, bucket_new scalar i32).
+
+    ``burst0`` is the batch-start bucket credit already capped at
+    ``bucket_cap_us``; ``t_ref`` the refill anchor (ts[0] on the first
+    batch, else the previous batch's last timestamp).  Selected packets
+    spend ``cost_us`` each while their cumulative spend fits the credit
+    available at their arrival — the documented prefix-sum approximation
+    of the shared token bucket.
+    """
+    selected = rate_gate_ref(t_i, c_i, lut, rand16, t_shift, c_shift)
+    credit = burst0 + jnp.maximum(ts - t_ref, 0)
+    spend = jnp.cumsum(jnp.where(selected, cost_us, 0).astype(I32))
+    granted = selected & (spend <= credit)
+    bucket_new = jnp.clip(
+        credit[-1] - jnp.sum(granted.astype(I32)) * cost_us,
+        0, bucket_cap_us).astype(I32)
+    return granted, bucket_new

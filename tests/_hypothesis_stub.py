@@ -62,6 +62,9 @@ def given(**strats):
             p for name, p in sig.parameters.items() if name not in strats])
         if hasattr(wrapper, "__wrapped__"):
             del wrapper.__wrapped__
+        # let conftest mark stub-backed tests so the run VISIBLY reports
+        # the reduced property coverage instead of silently shrinking it
+        wrapper._repro_hypothesis_stub = True
         return wrapper
 
     return deco

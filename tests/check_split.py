@@ -1,0 +1,61 @@
+"""Tier-1 split audit: the PR gate (-m "not slow") plus the slow set must
+cover EXACTLY the full suite — a marker typo or a bad -m expression can
+otherwise silently drop tests from CI.
+
+Collects three counts (full, not-slow, slow) via pytest's own collection
+and fails unless full == not_slow + slow.  Prints the counts so the CI
+log records what each tier runs.
+
+    python -m tests.check_split
+"""
+
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+
+_COLLECTED = re.compile(r"(\d+)(?:/\d+)? tests? collected", re.M)
+_EMPTY = re.compile(r"no tests ran|(\d+) deselected", re.M)
+
+
+def collect_count(marker_expr: str | None = None) -> int:
+    cmd = [sys.executable, "-m", "pytest", "--collect-only", "-q"]
+    if marker_expr:
+        cmd += ["-m", marker_expr]
+    proc = subprocess.run(cmd, capture_output=True, text=True)
+    out = proc.stdout + proc.stderr
+    if proc.returncode not in (0, 5):       # 5 = nothing collected
+        sys.stderr.write(out)
+        raise SystemExit(f"collection failed (exit {proc.returncode}) "
+                         f"for -m {marker_expr!r}")
+    m = _COLLECTED.search(out)
+    if m:
+        return int(m.group(1))
+    if proc.returncode == 5 or _EMPTY.search(out):
+        return 0
+    sys.stderr.write(out)
+    raise SystemExit(f"could not parse collection count for "
+                     f"-m {marker_expr!r}")
+
+
+def main() -> int:
+    full = collect_count()
+    fast = collect_count("not slow")
+    slow = collect_count("slow")
+    print(f"tier-1 split: full={full}  pr-gate(not slow)={fast}  "
+          f"scheduled-extra(slow)={slow}")
+    if full != fast + slow:
+        print(f"SPLIT MISMATCH: {fast} + {slow} != {full} — some tests "
+              "are in neither tier (bad marker expression or collection "
+              "divergence)")
+        return 1
+    if fast == 0:
+        print("SPLIT MISMATCH: PR gate collects zero tests")
+        return 1
+    print("split covers the full suite")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

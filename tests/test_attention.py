@@ -67,6 +67,7 @@ def test_decode_attention_matches_last_position():
     assert float(jnp.max(jnp.abs(full[:, -1] - out))) < 1e-4
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(s=st.integers(8, 80), hkv=st.sampled_from([1, 2, 4]),
        g=st.sampled_from([1, 2, 4]), chunk=st.sampled_from([8, 16, 32]),

@@ -176,6 +176,7 @@ def det_farms():
     return mk(1), mk(ENGINES)
 
 
+@pytest.mark.slow
 @settings(max_examples=5, deadline=None)
 @given(seed=st.integers(0, 10**6))
 def test_engine_partitioning_preserves_per_flow_verdicts(det_farms, seed):

@@ -230,6 +230,7 @@ def test_pipes_p1_bitwise_identical_to_device_driver():
                                       np.asarray(s_ref.state[k]), err_msg=k)
 
 
+@pytest.mark.slow
 @settings(max_examples=5, deadline=None)
 @given(seed=st.integers(0, 10**6))
 def test_partitioning_preserves_per_flow_verdicts(det_systems, seed):

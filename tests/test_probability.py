@@ -1,6 +1,7 @@
 """Eq. 2 probability model + Appendix A fairness (property tests)."""
 
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.probability import (LUTConfig, build_lut, expected_period,
@@ -64,6 +65,7 @@ def test_fairness_appendix_a(seed, n_flows):
     assert np.isclose(mean, n_flows / v, rtol=1e-9)
 
 
+@pytest.mark.slow
 def test_fairness_empirical_simulation():
     """Monte-carlo of the sampling process: measured E[interval] ~= N/V.
 
