@@ -21,7 +21,7 @@ import numpy as np
 from benchmarks._io import write_json_atomic
 from repro.baselines import bos as bos_lib
 from repro.baselines import n3ic as n3ic_lib
-from repro.baselines.common import flow_vote, macro_f1
+from repro.baselines.common import confusion_matrix, flow_vote, macro_f1
 from repro.baselines.flowlens import FlowLensModel, markers
 from repro.baselines.leo import LeoModel
 from repro.baselines.netbeacon import NetBeaconModel
@@ -62,6 +62,7 @@ def run_task(task: str, n_flows: int = 500, steps: int = 300,
              adapter: Optional[str] = None) -> Dict[str, Dict[str, float]]:
     classes, _ = task_meta(task)
     k = len(classes)
+    out_classes = list(classes)
     if source is not None:
         from repro.data.trace_ingest import load_flows
 
@@ -93,8 +94,16 @@ def run_task(task: str, n_flows: int = 500, steps: int = 300,
         uf, votes = flow_vote(pred, fte)
         flow_labels = np.asarray([yte[fte == f][0] for f in uf])
         flow_f1 = macro_f1(flow_labels, votes, k)
-        out[f"{nm}-pkt"] = {"macro_f1": pkt_f1}
-        out[f"{nm}-flow"] = {"macro_f1": flow_f1}
+        # per-class confusion in the artifact: a macro-F1 riding one
+        # majority class shows up as empty off-diagonal rows here (the
+        # regression gate reads macro_f1 only and ignores these keys)
+        out[f"{nm}-pkt"] = {
+            "macro_f1": pkt_f1,
+            "confusion": confusion_matrix(yte, pred, k).tolist()}
+        out[f"{nm}-flow"] = {
+            "macro_f1": flow_f1,
+            "confusion": confusion_matrix(flow_labels, votes,
+                                          k).tolist()}
 
     # ---- FlowLens (flow-level only) ----
     xf, yf = markers(tr_flows)
@@ -148,6 +157,9 @@ def run_task(task: str, n_flows: int = 500, steps: int = 300,
     pred = np.asarray(jnp.argmax(n3ic_lib.apply(t.params,
                                                 jnp.asarray(xne)), -1))
     out["n3ic-pkt"] = {"macro_f1": macro_f1(yne, pred, k)}
+    # class-name legend for the confusion matrices (row/col order); a
+    # list, so the regression-gate extractor skips it
+    out["_classes"] = out_classes
     return out
 
 

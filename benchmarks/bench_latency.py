@@ -5,7 +5,11 @@ transmission (optical, 1-3us), inference (FENIX 1.2us FPGA vs FlowLens
 >1000us CPU).  We report:
   - the FPGA cycle-model latency of our INT8 models (ZU19EG-like array)
   - the TPU-v5e roofline latency of the same window batch (Pallas kernel)
-  - measured CPU wall-time per inference (this container, for reference)
+  - measured CPU wall-time per inference (this container, for reference),
+    for BOTH the served INT8 integer path (kernels/int8_matmul, "ref"
+    backend) and the float parent model — the int8-vs-float serving
+    comparison of the Fig. 11 analogue
+  - engine-farm service latency of a 128-window batch at E in {1, 2, 4}
   - the control-plane path modeled with the paper's measured RTTs.
 """
 
@@ -52,6 +56,16 @@ def main(out_path: str = None) -> Dict:
             r = model.infer(batch)
         jax.block_until_ready(r)
         cpu_us = (time.time() - t0) / reps / batch.shape[0] * 1e6
+        # float parent model on the same batch: what serving would cost
+        # without quantization (per-inference wall time, this container)
+        float_fn = jax.jit(lambda p, b: jnp.argmax(
+            traffic.apply(p, cfg, b), -1))
+        jax.block_until_ready(float_fn(params, batch))
+        t0 = time.time()
+        for _ in range(reps):
+            r = float_fn(params, batch)
+        jax.block_until_ready(r)
+        float_us = (time.time() - t0) / reps / batch.shape[0] * 1e6
         # engine-farm service: the same 128-window batch split across E
         # engines (cycle model) and the fused multi-engine inference pass
         # (one infer_engines call serving every engine's lanes at once)
@@ -74,6 +88,8 @@ def main(out_path: str = None) -> Dict:
             "farm4_fused_cpu_us_per_inf": fused_us,
             "tpu_roofline": tpu_latency_us(cfg, batch=128),
             "cpu_measured_us_per_inf": cpu_us,
+            "float_cpu_us_per_inf": float_us,
+            "int8_vs_float_cpu_ratio": cpu_us / max(float_us, 1e-9),
             "speedup_vs_control_plane":
                 (PAPER["flowlens"]["transmission_us"]
                  + PAPER["flowlens"]["inference_us"])

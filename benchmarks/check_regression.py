@@ -70,12 +70,18 @@ def _metrics_traces(doc) -> List[Metric]:
 
 
 def _metrics_accuracy(doc) -> List[Metric]:
+    # extract ONLY numeric macro_f1 leaves: scheme dicts carry extra
+    # artifact keys (per-class "confusion" matrices, "_classes" legends,
+    # "_wall_s" timings) that are documentation, not gated metrics —
+    # anything that is not a {"macro_f1": <number>} entry is skipped so
+    # adding artifact detail never breaks the gate
     out: List[Metric] = []
     for task, schemes in doc.items():
         if not isinstance(schemes, dict):
             continue
         for name, res in schemes.items():
-            if isinstance(res, dict) and "macro_f1" in res:
+            if isinstance(res, dict) and \
+                    isinstance(res.get("macro_f1"), (int, float)):
                 out.append((f"{task}/{name}", "f1", res["macro_f1"]))
     return out
 

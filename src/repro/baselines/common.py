@@ -55,6 +55,19 @@ def per_class_prf(y_true: np.ndarray, y_pred: np.ndarray, n_classes: int
     return out
 
 
+def confusion_matrix(y_true: np.ndarray, y_pred: np.ndarray,
+                     n_classes: int) -> np.ndarray:
+    """[n_classes, n_classes] counts, rows = true class, cols = predicted.
+
+    The per-class companion of :func:`macro_f1`: a high macro-F1 riding
+    one majority class shows up here as empty off-diagonal rows.
+    """
+    cm = np.zeros((n_classes, n_classes), np.int64)
+    np.add.at(cm, (np.asarray(y_true, np.int64),
+                   np.asarray(y_pred, np.int64)), 1)
+    return cm
+
+
 def flow_vote(pred: np.ndarray, flow_id: np.ndarray
               ) -> Tuple[np.ndarray, np.ndarray]:
     """Majority vote of window/packet predictions per flow."""

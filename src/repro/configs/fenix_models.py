@@ -39,3 +39,37 @@ def fenix_cnn(num_classes: int = 7) -> TrafficModelConfig:
 
 def fenix_rnn(num_classes: int = 7) -> TrafficModelConfig:
     return TrafficModelConfig(name="fenix-rnn", kind="rnn", num_classes=num_classes)
+
+
+def fenix_cnn_tiny(num_classes: int = 7) -> TrafficModelConfig:
+    """CI-sized CNN: same layer structure as the paper model, shrunk so a
+    trained + quantized instance serves inside the tier-1 test budget
+    (the serving-loop conformance suite trains one per session)."""
+    return TrafficModelConfig(name="fenix-cnn-tiny", kind="cnn",
+                              num_classes=num_classes, embed_dim=4,
+                              conv_filters=(8,), fc_dims=(16,))
+
+
+def fenix_rnn_tiny(num_classes: int = 7) -> TrafficModelConfig:
+    """CI-sized RNN counterpart of :func:`fenix_cnn_tiny`."""
+    return TrafficModelConfig(name="fenix-rnn-tiny", kind="rnn",
+                              num_classes=num_classes, embed_dim=4,
+                              rnn_units=16)
+
+
+# serving-model registry: the ``FenixConfig(model=...)`` names that map to
+# a quantized EngineModel ("bylen" is handled by the serving factory)
+MODEL_CONFIGS = {
+    "int8_cnn": fenix_cnn,
+    "int8_rnn": fenix_rnn,
+    "int8_cnn_tiny": fenix_cnn_tiny,
+    "int8_rnn_tiny": fenix_rnn_tiny,
+}
+
+
+def model_config(name: str, num_classes: int = 7) -> TrafficModelConfig:
+    """Resolve a ``FenixConfig.model`` name to its TrafficModelConfig."""
+    if name not in MODEL_CONFIGS:
+        raise ValueError(f"unknown model {name!r}; expected one of "
+                         f"{('bylen',) + tuple(sorted(MODEL_CONFIGS))}")
+    return MODEL_CONFIGS[name](num_classes)

@@ -117,6 +117,21 @@ class FenixConfig:
     # derived per-pipe / pooled-farm configs inherit it, so one knob
     # switches the whole data plane.
     gate_backend: Optional[str] = None
+    # serving model, used when FenixSystem is built without an explicit
+    # model object: "bylen" (deterministic stand-in) or an int8_* name
+    # from model_engine.serving.SERVING_MODELS (trained + quantized
+    # traffic classifier running on kernels/int8_matmul).
+    model: str = "bylen"
+    # quantized-checkpoint directory (serving.save_quantized layout) the
+    # int8 model is loaded from; None trains the CI-sized default once
+    # per process.  Ignored for model="bylen".
+    model_dir: Optional[str] = None
+    # int8-GEMM backend for the Model Engine, the Model-Engine sibling of
+    # gate_backend: "ref" | "pallas" | "pallas_tpu".  Applies to the
+    # serving model — whether named here or passed to FenixSystem as an
+    # EngineModel object (whose backend field it overrides).  Rejected
+    # with model="bylen", which runs no GEMMs.
+    matmul_backend: Optional[str] = None
 
 
 def pipe_mesh(num_pipes: int) -> Optional[Mesh]:
@@ -302,10 +317,11 @@ class FenixSystem:
     the simulated ring itself.
     """
 
-    def __init__(self, cfg: FenixConfig, model: EngineModel,
+    def __init__(self, cfg: FenixConfig, model: Optional[EngineModel] = None,
                  tree: Optional[Dict] = None, tree_depth: int = 4,
                  oracle_windows: Optional[List[np.ndarray]] = None,
                  n_est: float = 1000.0, q_est_pps: float = 1e6):
+        from repro.core.model_engine import serving
         from repro.kernels.rate_gate.ops import validate_backend
 
         if cfg.gate_backend is not None:
@@ -313,6 +329,23 @@ class FenixSystem:
                 cfg, engine=dataclasses.replace(
                     cfg.engine, gate_backend=cfg.gate_backend))
         validate_backend(cfg.engine.gate_backend)
+        if model is None:
+            # resolve the config's serving-model name (trains/loads the
+            # quantized classifier for int8_* names; see serving.py)
+            model = serving.build_model(cfg.model,
+                                        matmul_backend=cfg.matmul_backend,
+                                        model_dir=cfg.model_dir)
+        elif cfg.matmul_backend is not None:
+            # explicit model object: the config knob still wins, so one
+            # FenixConfig switch flips every driver of a conformance run
+            from repro.kernels.int8_matmul.ops import (
+                validate_backend as validate_matmul)
+            validate_matmul(cfg.matmul_backend)
+            if not isinstance(model, EngineModel):
+                raise ValueError(
+                    "matmul_backend applies to quantized EngineModels; "
+                    f"got {type(model).__name__}")
+            model = dataclasses.replace(model, backend=cfg.matmul_backend)
         self.cfg = cfg
         self.model = model
         self.tree = tree

@@ -21,9 +21,22 @@ from repro.quant.quantize import int8_apply
 
 @dataclasses.dataclass(frozen=True)
 class EngineModel:
+    """A quantized traffic model serving on the INT8 systolic GEMM.
+
+    ``qparams`` is the integer model from ``quant.quantize_traffic`` (or a
+    ``serving.load_quantized`` checkpoint); ``backend`` selects the
+    ``kernels/int8_matmul`` implementation for every GEMM this model runs
+    — one of ``ops.MATMUL_BACKENDS``, threaded from
+    ``FenixConfig(matmul_backend=...)`` by the serving factory.
+    """
+
     cfg: TrafficModelConfig
     qparams: Dict
     backend: str = "ref"         # "ref" (CPU sim) | "pallas" | "pallas_tpu"
+
+    @property
+    def num_classes(self) -> int:
+        return self.cfg.num_classes
 
     def infer(self, payload: jax.Array) -> jax.Array:
         """payload [B, T, 2] int32 -> class [B] int32."""

@@ -63,10 +63,22 @@ def int8_matmul_pallas(a: jax.Array, b: jax.Array,
                        shift: Optional[int] = None,
                        bm: int = 128, bn: int = 128, bk: int = 128,
                        interpret: bool = True) -> jax.Array:
-    """a [M,K] int8, b [K,N] int8; M,N,K must be multiples of the blocks.
+    """Blocked INT8 GEMM on the MXU: same contract as ``int8_matmul_ref``.
 
-    interpret=True runs the kernel body on CPU (this container); on real
-    TPU pass interpret=False.
+      a     [M, K] int8, b [K, N] int8 — M, N, K must be multiples of
+            the block shapes (bm, bn, bk); callers go through
+            ``ops.int8_matmul``, which pads arbitrary shapes up to the
+            blocks and slices the result back.
+      bias  [N] int32 on the accumulator grid, shift the pow2
+            requantization (round-half-up, saturate to [-127, 127]) —
+            see :func:`~repro.kernels.int8_matmul.ref.int8_matmul_ref`
+            for the full quant-scale contract.
+
+    Returns [M, N] int8 when ``shift`` is given, int32 otherwise.
+    ``interpret=True`` (the ``"pallas"`` backend) runs the kernel body
+    through the Pallas interpreter on CPU — bit-identical, usable inside
+    jitted scans/shard_map; ``interpret=False`` (``"pallas_tpu"``)
+    compiles for a real TPU MXU.
     """
     m, k = a.shape
     k2, n = b.shape

@@ -1,9 +1,25 @@
-"""jit'd public wrapper for the INT8 GEMM: padding, backend switch, vmap.
+"""Public entry points for the INT8 systolic GEMM: padding, backend
+dispatch, conv-as-GEMM.
 
-``int8_matmul(a, b, ...)`` pads M/N/K up to block multiples, dispatches to
-the Pallas kernel (interpret=True on CPU, compiled on real TPU) or the
-pure-jnp reference (the default for CPU simulation speed), and slices the
-result back.
+This is the Model Engine's matmul surface (§5.2): every dense layer and
+every conv layer of the quantized traffic models lowers onto one of the
+two functions here, selected by a single ``backend`` knob that
+``FenixConfig(matmul_backend=...)`` threads through the serving loop the
+same way ``gate_backend`` selects the admission kernel:
+
+  ``"ref"``         pure-jnp oracle (``ref.int8_matmul_ref``) — default;
+                    fastest on CPU, the numerics contract the Pallas
+                    kernel must match bit-for-bit.
+  ``"pallas"``      the Pallas kernel in interpret mode — runs anywhere,
+                    asserted bit-identical to ``"ref"``
+                    (tests/test_quantize.py, tests/test_conformance.py).
+  ``"pallas_tpu"``  the same kernel compiled for a real TPU MXU.
+
+Shape/dtype contract (shared by every backend): inputs are int8, the
+accumulator is int32, and requantization is a power-of-two right shift —
+see :func:`int8_matmul`.  The wrappers pad M/N/K up to the 128-multiple
+block shapes the kernel wants and slice the result back, so callers never
+see the padding.
 """
 
 from __future__ import annotations
@@ -16,13 +32,23 @@ import jax.numpy as jnp
 from repro.kernels.int8_matmul.kernel import int8_matmul_pallas
 from repro.kernels.int8_matmul.ref import int8_matmul_ref
 
-_BACKEND = "ref"  # "ref" | "pallas" | "pallas_tpu"
+MATMUL_BACKENDS = ("ref", "pallas", "pallas_tpu")
+
+_BACKEND = "ref"
+
+
+def validate_backend(name: str) -> str:
+    """Check a matmul backend name; returns it (raises ValueError else)."""
+    if name not in MATMUL_BACKENDS:
+        raise ValueError(f"unknown matmul_backend {name!r}; "
+                         f"expected one of {MATMUL_BACKENDS}")
+    return name
 
 
 def set_backend(name: str) -> None:
+    """Set the process-wide default backend (overridden per call)."""
     global _BACKEND
-    assert name in ("ref", "pallas", "pallas_tpu")
-    _BACKEND = name
+    _BACKEND = validate_backend(name)
 
 
 def _pad(x, m0, m1):
@@ -37,8 +63,26 @@ def int8_matmul(a: jax.Array, b: jax.Array,
                 bias: Optional[jax.Array] = None,
                 shift: Optional[int] = None,
                 backend: Optional[str] = None) -> jax.Array:
-    """a [M,K] int8 @ b [K,N] int8 -> [M,N] int32 (int8 when shift given)."""
-    backend = backend or _BACKEND
+    """INT8 GEMM with int32 accumulation and pow2 requantization.
+
+    Contract (identical across backends, asserted bit-for-bit in tests):
+
+      a      [M, K] int8      activations (rows are independent lanes;
+                              zero-padded rows produce zero-padded rows)
+      b      [K, N] int8      weights
+      bias   [N]   int32      optional, on the accumulator grid
+                              2^(sa_in + sw) (quant/quantize.py)
+      shift  int >= 0         optional pow2 requantization: the int32
+                              accumulator is rounded half-up by
+                              ``(acc + (1 << (shift-1))) >> shift`` and
+                              saturated to [-127, 127] int8.  ``None``
+                              returns the raw int32 accumulator.
+
+    Returns [M, N] — int8 when ``shift`` is given, int32 otherwise.
+    ``backend`` overrides the process default (see module docstring); the
+    Pallas backends pad M/N/K to 128-multiples internally and slice back.
+    """
+    backend = validate_backend(backend or _BACKEND)
     m, k = a.shape
     _, n = b.shape
     if backend == "ref":
@@ -58,11 +102,19 @@ def int8_matmul(a: jax.Array, b: jax.Array,
 def int8_conv1d(x: jax.Array, w: jax.Array, bias: Optional[jax.Array],
                 shift: Optional[int], backend: Optional[str] = None
                 ) -> jax.Array:
-    """Causal-free 'same' conv1d as im2col onto the systolic GEMM.
+    """'same'-padded conv1d as im2col onto the systolic GEMM.
 
-    x [B,S,Cin] int8, w [K,Cin,Cout] int8 -> [B,S,Cout].
-    The paper runs Conv layers on the same systolic array as FC (§5.2) —
-    im2col is exactly that mapping.
+    The paper runs Conv layers on the same systolic array as FC layers
+    (§5.2, "one systolic array, many layer types") — im2col is exactly
+    that mapping: the K-tap window unrolls into the GEMM's contraction
+    dimension and the conv becomes one :func:`int8_matmul` call.
+
+      x      [B, S, Cin]    int8 activations
+      w      [K, Cin, Cout] int8 filters (K odd -> symmetric 'same' pad)
+      bias   [Cout] int32 / shift — same requantization contract as
+                            :func:`int8_matmul`
+
+    Returns [B, S, Cout] (int8 when ``shift`` is given, int32 otherwise).
     """
     bsz, s, cin = x.shape
     kk, _, cout = w.shape

@@ -17,7 +17,23 @@ import jax.numpy as jnp
 def int8_matmul_ref(a: jax.Array, b: jax.Array,
                     bias: Optional[jax.Array] = None,
                     shift: Optional[int] = None) -> jax.Array:
-    """a [M,K] int8, b [K,N] int8 -> int32 [M,N] (or int8 if shift given)."""
+    """Reference INT8 GEMM — the numerics contract every backend matches.
+
+      a      [M, K] int8     activations
+      b      [K, N] int8     weights
+      bias   [N]    int32    optional, added on the accumulator grid
+                             2^(sa_in + sw) before requantization
+      shift  int >= 0        optional pow2 requantization: round-half-up
+                             ``(acc + (1 << (shift-1))) >> shift`` then
+                             saturate to [-127, 127].  ``shift=0`` only
+                             saturates; ``None`` skips requantization.
+
+    Returns [M, N] int8 when ``shift`` is given, raw int32 accumulator
+    otherwise.  Accumulation is exact (int32 never overflows for K <=
+    2^15 at full-scale int8 inputs), so ``ops.int8_matmul(backend=
+    "pallas")`` is asserted bit-identical to this function in
+    tests/test_kernels.py and tests/test_quantize.py.
+    """
     assert a.dtype == jnp.int8 and b.dtype == jnp.int8
     acc = jnp.dot(a.astype(jnp.int32), b.astype(jnp.int32),
                   preferred_element_type=jnp.int32)

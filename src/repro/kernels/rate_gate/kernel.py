@@ -81,7 +81,14 @@ def rate_gate_pallas(t_i: jax.Array, c_i: jax.Array, lut: jax.Array,
                      prob_bits: int = 16, tile: int = 256,
                      interpret: bool = True,
                      use_tpu_prng: bool = False) -> jax.Array:
-    """t_i/c_i [N] int32 (N % tile == 0) -> selected mask [N] int32."""
+    """Selection-only kernel: [N] int32 inputs -> selected mask [N] int32.
+
+    N must be a multiple of ``tile`` (``ops.rate_gate`` pads and slices
+    back).  ``use_tpu_prng=True`` draws the 16-bit uniforms on-core from
+    ``seed`` (TPU only); otherwise the caller-supplied ``rand16`` tile is
+    compared — same distribution, deterministic replay.  ``interpret``
+    selects the CPU Pallas interpreter vs a real TPU compile.
+    """
     n = t_i.shape[0]
     assert n % tile == 0, (n, tile)
     grid = (n // tile,)

@@ -34,6 +34,7 @@ _TILE = 256
 
 
 def validate_backend(name: str) -> str:
+    """Check a gate backend name; returns it (raises ValueError else)."""
     if name not in GATE_BACKENDS:
         raise ValueError(f"unknown gate_backend {name!r}; "
                          f"expected one of {GATE_BACKENDS}")
@@ -41,6 +42,11 @@ def validate_backend(name: str) -> str:
 
 
 def set_backend(name: str) -> None:
+    """Set the process-wide default gate backend (overridden per call).
+
+    ``FenixConfig(gate_backend=...)`` is the usual way to pick one — it
+    threads through every driver path without touching this global.
+    """
     global _BACKEND
     _BACKEND = validate_backend(name)
 
@@ -50,6 +56,25 @@ def rate_gate(t_i: jax.Array, c_i: jax.Array, lut: jax.Array,
               seed: Optional[jax.Array] = None,
               t_shift: int = 10, c_shift: int = 0, prob_bits: int = 16,
               backend: Optional[str] = None) -> jax.Array:
+    """Selection-only probability gate: P-LUT lookup + random threshold.
+
+      t_i, c_i  [n] int32   per-packet LUT coordinates (inter-arrival
+                            time and flow count), bucketed by
+                            ``>> t_shift`` / ``>> c_shift`` and clipped
+                            to the LUT's edges
+      lut       [T, C] i32  admission probabilities as fixed-point
+                            fractions of 2^prob_bits
+      rand16    [n] int32   uniform draws in [0, 2^prob_bits) — required
+                            for "ref"/"pallas" (deterministic replay);
+                            "pallas_tpu" can instead derive them from
+                            ``seed`` with the on-core PRNG
+
+    Returns [n] bool: ``rand16 < lut[t_i >> t_shift, c_i >> c_shift]``.
+    ``backend`` overrides the process default; the Pallas backends pad n
+    to the 256-lane tile internally and slice back.  Kept unfused for
+    benchmarks and kernel sweeps — the Data Engine serves through
+    :func:`fused_admission`.
+    """
     backend = validate_backend(backend or _BACKEND)
     n = t_i.shape[0]
     if backend == "ref":

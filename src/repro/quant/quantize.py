@@ -41,6 +41,26 @@ def _q(x: np.ndarray, shift: int, dtype=np.int8) -> np.ndarray:
                    -lim, lim).astype(dtype)
 
 
+def quantize_array(x: np.ndarray, shift: int, dtype=np.int8) -> np.ndarray:
+    """Fixed-point quantize: ``round(x * 2^shift)`` saturated to dtype.
+
+    ``shift`` is the decimal-point position (2^-shift is the grid step);
+    negative shifts divide instead.  The public form of the scheme every
+    weight/activation in this module uses.
+    """
+    return _q(x, shift, dtype)
+
+
+def dequantize_array(x_q: np.ndarray, shift: int) -> np.ndarray:
+    """Inverse grid map: ``x_q * 2^-shift`` (float64).
+
+    Round-trip contract (tests/test_quantize.py): for |x| <= dtype_max *
+    2^-shift, ``|dequantize(quantize(x)) - x| <= 2^-(shift+1)`` — half a
+    grid step; values beyond the representable range saturate.
+    """
+    return np.asarray(x_q, np.float64) * (2.0 ** -shift)
+
+
 def _collect_activations(params: Dict, cfg: TrafficModelConfig,
                          payloads: jax.Array) -> Dict[str, float]:
     """Float forward, recording absmax at every quantization site."""

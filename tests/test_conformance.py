@@ -21,6 +21,7 @@ import pytest
 
 from repro.core.fenix import FenixConfig, FenixSystem
 from repro.core.model_engine.inference import ByLenModel
+from repro.core.model_engine.vector_io import IOConfig
 from repro.data.synthetic_traffic import make_flows, packet_stream
 
 BATCH = 256
@@ -103,6 +104,74 @@ def test_fused_gate_conforms_on_multi_pipe_shapes(trace, driver):
                            (driver, "pallas"))
     assert (v_pal == v_ref).all()
     assert s_pal == s_ref
+
+
+# ---------------------------------------------------------------------------
+# INT8 serving model (ISSUE 6): the trained + quantized classifier named by
+# FenixConfig(model=...) replaces ByLenModel; the serving factory's
+# process-wide cache guarantees every driver here serves the SAME weights.
+# Smaller shapes than the ByLenModel matrix: each granted batch runs real
+# GEMMs (128-padded when interpreting the Pallas kernel).
+# ---------------------------------------------------------------------------
+
+I8_BATCH = 128
+I8_LIMIT = 700         # not a multiple of I8_BATCH: tails covered
+
+
+@pytest.fixture(scope="module")
+def trace_int8():
+    flows = make_flows("iscx", 30, seed=17)
+    return packet_stream(flows, limit=I8_LIMIT)
+
+
+_cache_int8 = {}
+
+
+def _replay_int8(trace, driver_kw, backend, key):
+    if key not in _cache_int8:
+        sys_ = FenixSystem(FenixConfig(
+            io=IOConfig(queue_len=256), batch_size=I8_BATCH,
+            control_plane_every=CPE, model="int8_cnn_tiny",
+            matmul_backend=backend, **driver_kw))
+        out = sys_.run_trace(dict(trace))
+        _cache_int8[key] = (np.asarray(out["verdict"]), sys_.stats)
+    return _cache_int8[key]
+
+
+@pytest.mark.parametrize("driver", [d for d in DRIVERS if d != "host"])
+def test_int8_driver_conforms_to_host(trace_int8, driver):
+    """The quantized serving model produces identical verdicts and stats
+    on every driver path (FenixConfig(model="int8_cnn_tiny"))."""
+    v_ref, s_ref = _replay_int8(trace_int8, DRIVERS["host"], "ref",
+                                ("host", "ref"))
+    v, s = _replay_int8(trace_int8, DRIVERS[driver], "ref",
+                        (driver, "ref"))
+    assert v.shape == v_ref.shape == (I8_LIMIT,)
+    assert (v == v_ref).all()
+    assert s == s_ref
+
+
+@pytest.mark.parametrize("driver", sorted(DRIVERS))
+def test_int8_matmul_backend_conforms(trace_int8, driver):
+    """matmul_backend="pallas" is bit-identical to "ref" on this driver
+    path (the ISSUE-6 acceptance criterion): the interpreted Pallas GEMM
+    serves the same verdicts as the jnp oracle inside the jitted scans."""
+    v_ref, s_ref = _replay_int8(trace_int8, DRIVERS[driver], "ref",
+                                (driver, "ref"))
+    v_pal, s_pal = _replay_int8(trace_int8, DRIVERS[driver], "pallas",
+                                (driver, "pallas"))
+    assert (v_pal == v_ref).all()
+    assert s_pal == s_ref
+
+
+def test_int8_serving_actually_classifies(trace_int8):
+    """The int8 matrix exercises real inference: grants, served GEMM
+    batches, and DNN verdicts inside the class range."""
+    v, s = _replay_int8(trace_int8, DRIVERS["host"], "ref",
+                        ("host", "ref"))
+    assert s["inferences"] > 0
+    assert int((v >= 0).sum()) > 0
+    assert int(v.max()) < 7
 
 
 def test_stats_and_verdicts_sane(trace):

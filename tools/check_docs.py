@@ -1,0 +1,143 @@
+"""Docs CI: markdown link/path checker + TRAINING.md code-block smoke.
+
+Two checks, selectable so the dep-free half can run in the lint job:
+
+* ``--links-only`` — needs nothing installed.  Scans the repo's markdown
+  (README.md, ROADMAP.md, docs/*.md) for
+
+    - relative markdown links ``[text](path)`` (http(s)/mailto/#anchor
+      links are skipped), resolved against the containing file, and
+    - backticked repo paths like ``src/repro/core/fenix.py`` or
+      ``tests/test_conformance.py`` (tokens matching a top-level repo
+      directory + ``/`` + a file-ish tail),
+
+  and fails on any that do not exist — so a refactor that moves a module
+  breaks the docs job instead of silently rotting the docs.
+
+* code-block smoke (the default, additionally) — executes every
+  ```python block of docs/TRAINING.md in order in ONE shared namespace
+  (so later blocks can use earlier blocks' variables, exactly as a
+  reader would run them), with ``src/`` on the path.  Blocks whose first
+  line starts with ``# not executed in CI`` are compiled for syntax but
+  not run (real-corpus downloads, full-size training).  Needs jax — CI
+  runs it in the docs job after installing requirements.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_FILES = ["README.md", "ROADMAP.md"] + sorted(
+    os.path.join("docs", f) for f in os.listdir(os.path.join(REPO, "docs"))
+    if f.endswith(".md")) if os.path.isdir(os.path.join(REPO, "docs")) \
+    else ["README.md", "ROADMAP.md"]
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# `backticked` repo paths: a known top-level dir, then /, then a tail
+# ending in a file extension (pure directory mentions are allowed)
+TICKED_PATH = re.compile(
+    r"`((?:src|tests|benchmarks|docs|examples|tools)/[\w\-./]+"
+    r"\.(?:py|md|json|toml|yml|yaml|csv|pcap))`")
+
+SKIP_SCHEMES = ("http://", "https://", "mailto:")
+
+
+def check_links() -> list:
+    errors = []
+    for rel in DOC_FILES:
+        path = os.path.join(REPO, rel)
+        if not os.path.exists(path):
+            continue
+        text = open(path, encoding="utf-8").read()
+        base = os.path.dirname(path)
+        for m in MD_LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+                continue
+            if target.startswith("../../actions/"):
+                continue                      # the CI badge, host-side
+            target = target.split("#")[0]
+            if not target:
+                continue
+            resolved = os.path.normpath(os.path.join(base, target))
+            if not os.path.exists(resolved):
+                errors.append(f"{rel}: dead link ({m.group(1)})")
+        for m in TICKED_PATH.finditer(text):
+            ticked = m.group(1)
+            if ticked.startswith("benchmarks/results/") and \
+                    not ticked.startswith("benchmarks/results/baseline/"):
+                continue            # generated at runtime, not committed
+            resolved = os.path.join(REPO, ticked)
+            if not os.path.exists(resolved):
+                errors.append(f"{rel}: dead path `{ticked}`")
+    return errors
+
+
+FENCE = re.compile(r"^```(\w*)\s*$")
+
+
+def iter_code_blocks(md_path: str, lang: str = "python"):
+    """Yields (start_line, source) for each ``lang`` fence in the file."""
+    lines = open(md_path, encoding="utf-8").read().splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE.match(lines[i])
+        if m and m.group(1) == lang:
+            start = i + 1
+            j = start
+            while j < len(lines) and not lines[j].startswith("```"):
+                j += 1
+            yield start + 1, "\n".join(lines[start:j])
+            i = j + 1
+        else:
+            i += 1
+
+
+def run_blocks(md_rel: str = os.path.join("docs", "TRAINING.md")) -> list:
+    md_path = os.path.join(REPO, md_rel)
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    ns = {"__name__": "__docs__"}
+    errors = []
+    for lineno, src in iter_code_blocks(md_path):
+        label = f"{md_rel}:{lineno}"
+        try:
+            code = compile(src, label, "exec")
+        except SyntaxError as e:
+            errors.append(f"{label}: syntax error: {e}")
+            continue
+        first = src.lstrip().splitlines()[0] if src.strip() else ""
+        if first.startswith("# not executed in CI"):
+            print(f"{label}: syntax-checked only ({first[2:].strip()})")
+            continue
+        print(f"{label}: executing...")
+        try:
+            exec(code, ns)
+        except Exception as e:  # noqa: BLE001 — any failure fails the job
+            errors.append(f"{label}: {type(e).__name__}: {e}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--links-only", action="store_true",
+                    help="run only the dep-free link/path checker")
+    args = ap.parse_args(argv)
+    errors = check_links()
+    n_files = len([f for f in DOC_FILES
+                   if os.path.exists(os.path.join(REPO, f))])
+    print(f"link check: {n_files} markdown files scanned, "
+          f"{len(errors)} problems")
+    if not args.links_only:
+        errors += run_blocks()
+    for e in errors:
+        print(f"FAIL: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
