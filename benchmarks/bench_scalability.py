@@ -186,7 +186,7 @@ def engines_sweep(engines=(1, 2, 4), batch_size: int = 64,
             engine=EngineConfig(fpga_hz=fpga_hz),
             io=IOConfig(queue_len=256),
             batch_size=batch_size, control_plane_every=10**9,
-            num_engines=e, farm_path=True), ByLenModel(),
+            num_engines=e, driver="farm"), ByLenModel(),
             n_est=0.0, q_est_pps=0.0)
         sys_.run_trace(pk)                     # compile + warm
         sys_.reset()
@@ -288,7 +288,7 @@ def run_scale(cfg, qp, n_flows: int, pkts: int = 60_000,
             n_slots_log2=max(12, int(np.ceil(
                 np.log2(max(n_flows * 4, 2)))))),
         batch_size=batch_size, control_plane_every=cpe,
-        fast_mode=True), model, oracle_windows=oracle)
+        driver="device"), model, oracle_windows=oracle)
     t0 = time.perf_counter()
     out = sys_.run_trace(stream)
     wall_s = time.perf_counter() - t0

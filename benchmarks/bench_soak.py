@@ -1,0 +1,204 @@
+"""Sustained replay soak (``--only soak``): the zero-host-sync streaming
+data plane under continuous load.
+
+One ``FenixSystem(driver="device")`` replays the pcap fixture over and
+over through ``run_trace(TraceSpec(...))`` — state is NOT reset between
+passes, so this measures the steady state the single-shot benchmarks
+can't: compiled-cache reuse, donated-carry buffer recycling, RSS
+flatness, and the in-scan control plane staying at zero host syncs no
+matter how long the replay runs.
+
+Four replay modes are timed over identical packets:
+
+  overlap   streaming ingest, double-buffered: a producer thread parses
+            and stages block k+1 while the scan consumes block k
+            (``TraceSpec(overlap=True)``, the default)
+  sync      same streaming ingest, synchronous staging
+            (``TraceSpec(overlap=False)``) — parse and scan alternate
+  fused     in-memory replay, one scan per pass with the in-scan
+            control plane (the zero-host-sync data plane, parse
+            excluded)
+  synced-cp the same in-memory replay driven the pre-fold way: one
+            scan per T_w window with a host-driven ``control_plane()``
+            round trip between windows (what the in-scan ``"_cp"``
+            rebuild replaced)
+
+Reported (soak.json): per-pass pps + median steady-state pps per mode,
+``overlap_speedup`` (overlap vs sync staging — on multi-core hosts the
+parse hides under the scan; single-core runners can invert it since
+the producer thread competes for the only core), ``zerosync_speedup``
+(fused vs synced-cp, both in-memory, isolating the control-plane
+fold), host-sync counts (asserted 0 for the zero-sync modes), and
+per-pass VmRSS with its growth across the soak.  The regression gate
+(``check_regression.py``) gates the two speedup ratios — run-relative,
+so runner noise largely cancels — while absolute pps stays
+informational.
+
+Timing discipline: the first pass of every mode is an untimed warmup
+(compiles both block shapes + the tail), and each timed pass ends with
+``jax.block_until_ready`` on the carried state before the clock is read.
+
+``python -m benchmarks.bench_soak [--full] [--duration S]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import statistics
+import time
+from typing import Dict, List, Optional
+
+import jax
+
+from benchmarks._io import write_json_atomic
+from benchmarks.bench_traces import build_fixture
+from repro.core.fenix import FenixConfig, FenixSystem, TraceSpec
+from repro.core.model_engine.inference import ByLenModel
+from repro.data import trace_ingest as ti
+
+BATCH = 512
+CPE = 3
+# small chunks force multi-chunk parses per pass so there is actually
+# parse work for the producer thread to hide under the scans
+CHUNK_PKTS = 2048
+
+
+def _rss_mb() -> float:
+    with open("/proc/self/status") as f:
+        for line in f:
+            if line.startswith("VmRSS:"):
+                return int(line.split()[1]) / 1024.0
+    return 0.0
+
+
+def _soak_zero_sync(trace, n_pkts: int, passes: int,
+                    min_seconds: float) -> Dict:
+    """Replay ``trace`` (a TraceSpec for the streaming modes, a
+    packet-stream dict for the in-memory fused mode) repeatedly through
+    ONE system; per-pass pps after an untimed warmup pass.  Runs at
+    least ``passes`` timed passes and keeps going until ``min_seconds``
+    of timed replay have elapsed."""
+    sys_ = FenixSystem(FenixConfig(batch_size=BATCH,
+                                   control_plane_every=CPE,
+                                   driver="device"), ByLenModel())
+    sys_.run_trace(trace)                      # warmup: compile everything
+    jax.block_until_ready(sys_.state["lut"])
+    pps: List[float] = []
+    rss: List[float] = []
+    t_start = time.perf_counter()
+    while len(pps) < passes or \
+            time.perf_counter() - t_start < min_seconds:
+        t0 = time.perf_counter()
+        sys_.run_trace(trace)
+        jax.block_until_ready(sys_.state["lut"])
+        pps.append(n_pkts / (time.perf_counter() - t0))
+        rss.append(round(_rss_mb(), 1))
+    assert sys_.host_syncs == 0, (
+        f"zero-sync replay performed {sys_.host_syncs} host control-plane "
+        "syncs; the device driver must run them in-scan")
+    assert sys_.stats["packets"] == n_pkts * (len(pps) + 1)
+    return {"pps_per_pass": [round(p, 1) for p in pps],
+            "steady_pps": round(statistics.median(pps), 1),
+            "passes": len(pps), "host_syncs": sys_.host_syncs,
+            "rss_mb_per_pass": rss,
+            "rss_growth_mb": round(rss[-1] - rss[0], 1) if rss else 0.0}
+
+
+def _soak_synced(stream: Dict, passes: int) -> Dict:
+    """The pre-fold device loop: one scan per T_w window with a
+    host-driven ``control_plane()`` between windows — the host-sync
+    pattern the in-scan ``"_cp"`` rebuild removed.  In-scan rollover is
+    disabled (control_plane_every past the window count) so the host
+    round trip is the only control plane, exactly as before."""
+    win = BATCH * CPE
+    n_win = len(stream["ts_us"]) // win
+    windows = [{k: v[i * win:(i + 1) * win] for k, v in stream.items()}
+               for i in range(n_win)]
+    sys_ = FenixSystem(FenixConfig(batch_size=BATCH,
+                                   control_plane_every=1 << 30,
+                                   driver="device"), ByLenModel())
+    sys_.run_trace(windows[0])                 # warmup
+    sys_.control_plane()
+    jax.block_until_ready(sys_.state["lut"])
+    pps: List[float] = []
+    for _ in range(passes):
+        t0 = time.perf_counter()
+        for w in windows:
+            sys_.run_trace(w)
+            sys_.control_plane()
+        jax.block_until_ready(sys_.state["lut"])
+        pps.append(n_win * win / (time.perf_counter() - t0))
+    assert sys_.host_syncs == n_win * passes + 1
+    return {"pps_per_pass": [round(p, 1) for p in pps],
+            "steady_pps": round(statistics.median(pps), 1),
+            "passes": passes, "host_syncs": sys_.host_syncs,
+            "windows_per_pass": n_win}
+
+
+def main(out_path: Optional[str] = None, fast: bool = True,
+         duration: Optional[float] = None) -> Dict:
+    """``--only soak`` entry point.  ``duration`` is the minimum timed
+    replay per streaming mode (seconds); fast mode just runs the minimum
+    pass count."""
+    pcap = build_fixture()
+    stream = ti.load_stream(pcap)
+    n_pkts = len(stream["ts_us"])
+    passes = 3 if fast else 5
+    min_s = 0.0 if duration is None and fast else \
+        (duration if duration is not None else 90.0)
+
+    overlap = _soak_zero_sync(
+        TraceSpec(pcap, chunk_pkts=CHUNK_PKTS, overlap=True),
+        n_pkts, passes, min_s)
+    sync = _soak_zero_sync(
+        TraceSpec(pcap, chunk_pkts=CHUNK_PKTS, overlap=False),
+        n_pkts, passes, min_s)
+    # the control-plane comparison runs in-memory on both sides (parse
+    # excluded) over the same window-aligned packet count
+    win = BATCH * CPE
+    n_trim = (n_pkts // win) * win
+    trimmed = {k: v[:n_trim] for k, v in stream.items()}
+    fused = _soak_zero_sync(trimmed, n_trim, max(2, passes - 1), 0.0)
+    synced_cp = _soak_synced(trimmed, max(2, passes - 1))
+
+    res = {
+        "fixture": os.path.basename(pcap), "packets_per_pass": n_pkts,
+        "batch_size": BATCH, "control_plane_every": CPE,
+        "chunk_pkts": CHUNK_PKTS,
+        "overlap": overlap, "sync_staging": sync,
+        "fused": fused, "synced_control_plane": synced_cp,
+        # both gated ratios are run-relative: numerator and denominator
+        # come from the same process minutes apart, so machine speed
+        # cancels and the gate tracks the architecture, not the runner
+        "overlap_speedup": round(
+            overlap["steady_pps"] / max(sync["steady_pps"], 1e-9), 3),
+        "zerosync_speedup": round(
+            fused["steady_pps"] / max(synced_cp["steady_pps"], 1e-9), 3),
+    }
+    for mode in ("overlap", "sync_staging", "fused"):
+        print(f"soak_{mode}: steady_pps={res[mode]['steady_pps']:.0f} "
+              f"passes={res[mode]['passes']} "
+              f"host_syncs={res[mode]['host_syncs']} "
+              f"rss_growth_mb={res[mode].get('rss_growth_mb', 0.0)}",
+              flush=True)
+    print(f"soak_synced_cp: steady_pps="
+          f"{synced_cp['steady_pps']:.0f} "
+          f"host_syncs={synced_cp['host_syncs']}", flush=True)
+    print(f"soak: overlap_speedup={res['overlap_speedup']}x "
+          f"zerosync_speedup={res['zerosync_speedup']}x", flush=True)
+    if out_path:
+        write_json_atomic(out_path, res)
+    return res
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="multi-minute soak (5+ passes, >=90s per mode)")
+    ap.add_argument("--duration", type=float, default=None,
+                    help="minimum timed seconds per streaming mode")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "results", "soak.json"))
+    args = ap.parse_args()
+    main(out_path=args.out, fast=not args.full, duration=args.duration)

@@ -7,10 +7,11 @@ asserting the ``pcap -> ingest -> packet_stream`` round trip is
 bit-identical to the source stream, the subsystem's correctness oracle —
 then replays the ingested stream through all four trace drivers (the
 capture is parsed once; each driver's wall clock times the driver, not
-re-ingestion — the ``run_trace(source=...)`` selector itself is covered
-by examples/trace_smoke.py and tests/test_trace_ingest.py):
+re-ingestion — the streaming ``run_trace(TraceSpec(...))`` path itself
+is covered by examples/trace_smoke.py, tests/test_trace_ingest.py, and
+bench_soak.py):
 
-  host     batch-at-a-time reference loop (``device_path=False``)
+  host     batch-at-a-time reference loop (``driver="host"``)
   device   jitted single-pipe ``lax.scan``
   pipes    2-pipeline sharded driver (vmap fallback below 2 devices)
   farm     2-pipe x 2-engine Model-Engine farm
@@ -80,12 +81,12 @@ def _driver_configs(batch_size: int) -> List:
     ecfg = EngineConfig()
     return [
         ("host", FenixConfig(engine=ecfg, batch_size=batch_size,
-                             device_path=False)),
+                             driver="host")),
         ("device", FenixConfig(engine=ecfg, batch_size=batch_size)),
         ("pipes", FenixConfig(engine=ecfg, batch_size=batch_size,
                               num_pipes=2)),
         ("farm", FenixConfig(engine=ecfg, batch_size=batch_size,
-                             num_pipes=2, num_engines=2, farm_path=True)),
+                             num_pipes=2, num_engines=2, driver="farm")),
     ]
 
 

@@ -69,6 +69,19 @@ def _metrics_traces(doc) -> List[Metric]:
              r["served_inf_per_s"]) for r in doc["rows"]]
 
 
+def _metrics_soak(doc) -> List[Metric]:
+    # gate the zero-sync ratio only: fused and synced-cp replay the same
+    # in-memory stream in the same process, so runner speed cancels and
+    # the gate tracks the in-scan control-plane fold itself (observed
+    # ~2x, stable within ~15% across back-to-back runs).
+    # overlap_speedup stays informational: ingest overlap needs a spare
+    # core for the producer thread, so on single-core runners the ratio
+    # is scheduler noise (observed 0.8x-1.5x back to back on the same
+    # box) — soak.json still reports it for multi-core hosts.  Absolute
+    # steady_pps is informational too (see _metrics_traces).
+    return [("zerosync_speedup", "rate", doc["zerosync_speedup"])]
+
+
 def _metrics_accuracy(doc) -> List[Metric]:
     # extract ONLY numeric macro_f1 leaves: scheme dicts carry extra
     # artifact keys (per-class "confusion" matrices, "_classes" legends,
@@ -98,6 +111,7 @@ EXTRACTORS = {
     "throughput.json": _metrics_throughput,
     "engines.json": _metrics_engines,
     "traces.json": _metrics_traces,
+    "soak.json": _metrics_soak,
     "accuracy.json": _metrics_accuracy,
     "coverage.json": _metrics_coverage,
 }

@@ -11,7 +11,10 @@ JSON artifacts land in benchmarks/results/.
                  load past the Model-Engine service capacity)
   traces       — real-trace replay (ISSUE 4): pcap fixture -> streaming
                  ingest (bit-identity oracle) -> all four drivers
-                 (host/device/pipes/farm) via run_trace(source=...)
+                 (host/device/pipes/farm) via run_trace(trace=...)
+  soak         — sustained streaming replay (ISSUE 9): double-buffered
+                 ingest vs sync staging vs the per-window host-sync
+                 loop; steady-state pps, zero-host-sync assertion, RSS
   accuracy     — Table 2 (macro-F1, 9 schemes x 2 tasks)
   resource     — Tables 3+4 (SRAM/VMEM/MAC proxies)
   scalability  — Figure 10 (F1 vs concurrency/throughput)
@@ -37,8 +40,8 @@ from benchmarks._io import write_json_atomic
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
 SECTIONS = ("throughput", "gate", "pipes", "engines", "oversub", "traces",
-            "accuracy", "resource", "scalability", "latency", "fairness",
-            "roofline")
+            "soak", "accuracy", "resource", "scalability", "latency",
+            "fairness", "roofline")
 
 
 def _row(name: str, us: float, derived: str) -> None:
@@ -145,6 +148,18 @@ def main() -> None:
         _row("traces_total", (time.time() - t0) * 1e6,
              f"packets={res['rows'][0]['packets']};"
              f"source={res['source']}")
+
+    if want("soak"):
+        from benchmarks import bench_soak
+        t0 = time.time()
+        res = bench_soak.main(
+            out_path=os.path.join(RESULTS, "soak.json"), fast=args.fast)
+        _row("soak", (time.time() - t0) * 1e6,
+             f"steady_pps={res['overlap']['steady_pps']:.0f};"
+             f"overlap_speedup={res['overlap_speedup']:.2f}x;"
+             f"zerosync_speedup={res['zerosync_speedup']:.2f}x;"
+             f"host_syncs={res['overlap']['host_syncs']};"
+             f"rss_growth_mb={res['overlap']['rss_growth_mb']}")
 
     if want("accuracy"):
         from benchmarks import bench_accuracy

@@ -64,7 +64,9 @@ def main():
     stream = packet_stream(live_flows, limit=args.packets)
     oracle = [np.stack([f.pkt_len, f.ipd_us], -1).astype(np.int32)
               for f in live_flows]
-    system = FenixSystem(FenixConfig(fast_mode=not args.exact), model,
+    system = FenixSystem(FenixConfig(driver="host" if args.exact
+                                     else "device",
+                                     exact=args.exact), model,
                          tree=tree, oracle_windows=oracle)
     t0 = time.time()
     out = system.run_trace(stream)

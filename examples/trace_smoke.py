@@ -6,7 +6,7 @@ fixtures under ``benchmarks/fixtures`` via ``synthesize_pcap``, proves the
 ``pcap -> ingest -> packet_stream`` round trip is bit-identical to the
 regenerated source stream — which validates cached fixture bytes against
 the current generator — and replays the capture through the 2-pipeline
-sharded driver with ``run_trace(source=<pcap>)``.
+sharded driver with ``run_trace(<pcap path>)``.
 
 Run on CPU (2 virtual devices exercise the real pipe mesh; 1 falls back
 to vmap with identical semantics):
@@ -47,7 +47,7 @@ def main() -> None:
     sys_ = FenixSystem(
         FenixConfig(batch_size=512, control_plane_every=4, num_pipes=2),
         ByLenModel())
-    out = sys_.run_trace(source=pcap)
+    out = sys_.run_trace(pcap)
     v = out["verdict"]
     st = sys_.stats
     assert st["packets"] == n, (st["packets"], n)

@@ -56,7 +56,13 @@ def on_packet(state: Dict, cfg: EngineConfig, slot, h, is_new, collision,
 
 def window_reset(state: Dict, cfg: EngineConfig, now: jax.Array) -> Dict:
     """Control-plane T_w rollover (§4.1 Flow Counting Mechanism): hash
-    registers and the flow counter are reset and recalculated."""
+    registers and the flow counter are reset and recalculated.
+
+    Folded into ``rate_limiter.control_plane_update`` (which anchors the
+    new window at the state's own ``t_last``), so the LUT rebuild + reset
+    run as one pure jnp function inside the device drivers' scans; callers
+    that roll a window without rebuilding the LUT still use this
+    directly."""
     s = dict(state)
     s["flow_cnt"] = jnp.asarray(0, I32)
     s["win_pkt_cnt"] = jnp.asarray(0, I32)

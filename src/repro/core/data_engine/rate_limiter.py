@@ -84,43 +84,42 @@ def admit_batch(state: Dict, cfg: EngineConfig, t_i: jax.Array,
 
 
 def control_plane_update(state: Dict, cfg: EngineConfig) -> Dict:
-    """Rebuild the LUT from the observed window statistics (N, Q).
+    """T_w rollover: rebuild the LUT from the observed window statistics
+    (N, Q) and reset the window counters — as one pure jnp function.
 
-    This is the paper's 300-line control-plane Python component: it reads
-    Flow_cnt / Pkt_cnt from the switch each T_w and pushes a fresh table.
+    This is the paper's 300-line control-plane Python component, but
+    expressed entirely over array state so the device drivers can invoke
+    it INSIDE the jitted ``lax.scan`` at window boundaries (zero host
+    round-trips per window).  The host reference loop calls the same
+    function eagerly between batches — both paths share every rounding
+    step of :func:`repro.core.probability.build_lut_jnp`, which is what
+    keeps the rebuilt tables bit-identical across drivers (the
+    conformance suite's invariant).  ``flow_tracker.window_reset`` is
+    folded in: the new window anchors at the state's own clock
+    (``t_last``), no host-supplied "now" needed.
     """
+    from repro.core.data_engine import flow_tracker as ft
+    from repro.core.probability import build_lut_jnp
+
     s = dict(state)
-    s["lut"] = jnp.asarray(_lut_from_window(state["flow_cnt"],
-                                            state["win_pkt_cnt"], cfg), I32)
-    return s
-
-
-def _lut_from_window(flow_cnt, win_pkt_cnt, cfg: EngineConfig):
-    """One window's (N, Q) clamping + LUT build — the single formula site
-    shared by the single-pipe and per-pipe control planes."""
-    from repro.core.probability import build_lut
-
-    n = max(float(flow_cnt), 1.0)
-    q = max(float(win_pkt_cnt), 1.0) / max(float(cfg.window_us), 1.0)
-    return build_lut(n=n, q=q, v=cfg.token_rate_per_us, cfg=cfg.lut)
+    s["lut"] = build_lut_jnp(state["flow_cnt"], state["win_pkt_cnt"],
+                             window_us=cfg.window_us,
+                             v=cfg.token_rate_per_us, cfg=cfg.lut)
+    return ft.window_reset(s, cfg, state["t_last"])
 
 
 def control_plane_update_pipes(state: Dict, local_cfg: EngineConfig,
-                               num_pipes: int) -> Dict:
-    """Per-pipe LUT rebuild over a stacked [num_pipes, ...] state.
+                               num_pipes: int = 0) -> Dict:
+    """Per-pipe LUT rebuild + window reset over a stacked
+    [num_pipes, ...] state, pure jnp (a vmap of
+    :func:`control_plane_update`).
 
-    Each pipe gets its own table from its own window statistics and its own
-    rate share (``local_cfg.token_rate_per_us`` is already the per-pipe V);
-    pipe 0 of a one-pipe layout reproduces ``control_plane_update`` exactly.
-    This is the single host sync per control-plane window — one
-    device->host read of the [num_pipes] counters, one LUT push back.
+    Each pipe gets its own table from its own window statistics and its
+    own rate share (``local_cfg.token_rate_per_us`` is already the
+    per-pipe V), anchored at that pipe's own clock; pipe 0 of a one-pipe
+    layout reproduces ``control_plane_update`` exactly.  Runs unchanged
+    inside the sharded scans (per-pipe pure function, no cross-pipe
+    coupling) or eagerly from the host oracle.  ``num_pipes`` is kept for
+    signature compatibility; the stacked leading dim is authoritative.
     """
-    import numpy as np
-
-    flow_cnt = np.asarray(state["flow_cnt"], np.int64)
-    win_pkt = np.asarray(state["win_pkt_cnt"], np.int64)
-    luts = [_lut_from_window(flow_cnt[p], win_pkt[p], local_cfg)
-            for p in range(num_pipes)]
-    s = dict(state)
-    s["lut"] = jnp.asarray(np.stack(luts), I32)
-    return s
+    return jax.vmap(lambda st: control_plane_update(st, local_cfg))(state)

@@ -12,17 +12,22 @@ second (the paper's F in V=min(F, B/W)); results return to the switch with
 verdict are classified per-packet at line rate from the flow table; packets
 of unclassified flows fall back to the switch decision tree.
 
-Two trace drivers share the same semantics:
+Four trace drivers share the same semantics, selected by
+``FenixConfig(driver=...)``:
 
-* **Device path** (default, fast mode): ``run_trace`` pre-chunks the whole
-  stream into ``[n_chunks, batch_size]`` device arrays and runs a jitted
-  ``lax.scan`` per control-plane window — Vector I/O enqueue/dequeue, the
-  Model-Engine service budget, and the loop-latency delay line are all
-  array state inside the scan, so the only host synchronization is the
-  control-plane LUT rebuild at each T_w window boundary.
-* **Host path** (``device_path=False`` or scan mode): the original
-  batch-at-a-time ``step`` loop with Python-list in-flight results; kept as
-  the reference the device path is tested against.
+* **device** (the ``driver="auto"`` default): ``run_trace`` chunks the
+  stream into ``[n_chunks, batch_size]`` device arrays and runs ONE jitted
+  ``lax.scan`` — Vector I/O enqueue/dequeue, the Model-Engine service
+  budget, the loop-latency delay line, AND the control-plane LUT rebuild
+  at each T_w window boundary (the ``"_cp"`` scan channel) are all array
+  state inside the scan, so a replay issues zero host round trips
+  (``FenixSystem.host_syncs`` stays 0).  Capture paths / TraceSpec traces
+  stream through the same scan in double-buffered blocks: a producer
+  thread parses and stages chunk k+1 while the device scans chunk k.
+* **host** (``driver="host"``; ``exact=True`` for per-packet scan
+  admission): the original batch-at-a-time ``step`` loop with Python-list
+  in-flight results and an eager host-side control plane each window —
+  kept as the bit-identity oracle the device drivers are tested against.
 
 Multi-pipeline mode (``num_pipes=N``): a physical Tofino runs 2-4
 independent ingress pipelines that all feed the one FPGA Model Engine.
@@ -37,7 +42,7 @@ drain into the single Model-Engine service budget through an
 occupancy-weighted merge (``vio.pipe_shares``).  Verdicts return through
 per-pipe delay lines — a scatter keyed by the owning pipe, no all-gather.
 ``num_pipes=1`` keeps the exact single-pipe driver; forcing
-``pipes_path=True`` at ``num_pipes=1`` runs the sharded driver over a
+``driver="pipes"`` at ``num_pipes=1`` runs the sharded driver over a
 1-device mesh and is bit-identical to it (asserted in
 tests/test_multi_pipe.py).
 
@@ -51,7 +56,7 @@ with engines as consumers), and verdicts return through the owning pipe's
 delay line tagged with the serving engine.  The switch's admission scales
 with the pooled capacity (``farm_engine_config``: token rate x E).
 ``num_engines=1`` keeps the pipes/single drivers; forcing
-``farm_path=True`` at ``num_engines=1`` is bit-identical to the pipes
+``driver="farm"`` at ``num_engines=1`` is bit-identical to the pipes
 driver (asserted in tests/test_engine_farm.py).
 """
 
@@ -59,7 +64,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Tuple
+import os
+import queue as queue_mod
+import threading
+import warnings
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -82,12 +91,19 @@ from repro.core.model_engine import engine_farm as farm
 from repro.core.model_engine import vector_io as vio
 from repro.core.model_engine.inference import EngineModel
 from repro.core.data_engine import flow_tracker as ft
+from repro.data.trace_ingest import TraceSpec
 
 I32 = jnp.int32
 
 # packet-stream fields consumed by the data plane
 PKT_KEYS = ("src_ip", "dst_ip", "src_port", "dst_port", "proto",
             "ts_us", "pkt_len")
+
+# run_trace drivers ("auto" resolves at FenixConfig construction)
+DRIVER_NAMES = ("host", "device", "pipes", "farm")
+
+# the pre-driver= boolean selector cube, kept as a deprecation shim
+_LEGACY_KNOBS = ("fast_mode", "device_path", "pipes_path", "farm_path")
 
 
 @dataclasses.dataclass
@@ -96,21 +112,29 @@ class FenixConfig:
     io: vio.IOConfig = dataclasses.field(default_factory=vio.IOConfig)
     batch_size: int = 512            # packets per data-engine step, per pipe
     loop_latency_us: int = 3         # switch->FPGA->switch (Fig. 11)
-    fast_mode: bool = True           # vectorized admission (simulator)
     control_plane_every: int = 8     # LUT refresh cadence (batches)
-    device_path: bool = True         # run_trace as jitted lax.scan
+    # trace-driver selector — replaces the four interacting booleans
+    # (fast_mode/device_path/pipes_path/farm_path) of earlier revisions:
+    #   "auto"    farm if num_engines>1, else pipes if num_pipes>1, else
+    #             host if exact=True, else device
+    #   "host"    batch-at-a-time Python reference loop (the oracle every
+    #             other driver is tested against)
+    #   "device"  jitted single-pipe lax.scan, zero host syncs per window
+    #   "pipes"   mesh-sharded multi-pipeline scan (forcing it at
+    #             num_pipes=1 is bit-identical to "device")
+    #   "farm"    2-D pipe x engine engine-farm scan (forcing it at
+    #             num_engines=1 is bit-identical to "pipes")
+    driver: str = "auto"
+    # exact per-packet scan admission (reference semantics, slower).
+    # Host driver only: the vectorized scan drivers require the fast
+    # admission path.
+    exact: bool = False
     # switch ingress pipelines sharing the one Model Engine; each pipe gets
     # 1/num_pipes of the slot space and of the token rate.  Power of two.
     num_pipes: int = 1
-    # None: sharded driver iff num_pipes > 1.  True forces it at num_pipes=1
-    # (bit-identical to the single-pipe driver; used by tests/benchmarks).
-    pipes_path: Optional[bool] = None
     # FPGA Model Engines behind the switch (§7 scale-out).  Each engine
     # serves at the full per-engine rate; admission scales with the pool.
     num_engines: int = 1
-    # None: farm driver iff num_engines > 1.  True forces it at
-    # num_engines=1 (bit-identical to the pipes driver; tests/benchmarks).
-    farm_path: Optional[bool] = None
     # probability-gate backend override for EVERY driver path (host loop,
     # single-device scan, pipes, farm): "ref" | "pallas" | "pallas_tpu".
     # None keeps engine.gate_backend; a string replaces it, and the
@@ -132,6 +156,76 @@ class FenixConfig:
     # EngineModel object (whose backend field it overrides).  Rejected
     # with model="bylen", which runs no GEMMs.
     matmul_backend: Optional[str] = None
+    # ---- deprecated spellings (pre-driver= API) ---------------------------
+    # None means "not passed".  Any explicit value is mapped onto
+    # driver=/exact= in __post_init__ with a single DeprecationWarning per
+    # construct, then cleared; new code must use driver=.
+    fast_mode: Optional[bool] = None         # deprecated: use exact=
+    device_path: Optional[bool] = None       # deprecated: use driver=
+    pipes_path: Optional[bool] = None        # deprecated: use driver="pipes"
+    farm_path: Optional[bool] = None         # deprecated: use driver="farm"
+
+    def __post_init__(self):
+        legacy = {k: getattr(self, k) for k in _LEGACY_KNOBS
+                  if getattr(self, k) is not None}
+        if legacy:
+            if self.driver != "auto":
+                raise ValueError(
+                    "pass either driver= or the deprecated "
+                    f"{sorted(legacy)} booleans, not both")
+            warnings.warn(
+                "FenixConfig(" + ", ".join(f"{k}={v}" for k, v in
+                                           sorted(legacy.items()))
+                + ") is deprecated; use FenixConfig(driver="
+                  "\"auto\"|\"host\"|\"device\"|\"pipes\"|\"farm\") "
+                  "(and exact=True for the per-packet scan-admission "
+                  "host loop)", DeprecationWarning, stacklevel=3)
+            fm = legacy.get("fast_mode", True)
+            dp = legacy.get("device_path", True)
+            use_farm = (self.farm_path if self.farm_path is not None
+                        else self.num_engines > 1)
+            use_pipes = (self.pipes_path if self.pipes_path is not None
+                         else self.num_pipes > 1) or use_farm
+            if use_pipes and not (fm and dp):
+                raise ValueError(
+                    "the sharded drivers run the vectorized device scan "
+                    "only: FenixConfig(driver=\"pipes\"|\"farm\") cannot "
+                    "be combined with the deprecated fast_mode=False / "
+                    "device_path=False spellings")
+            if use_farm:
+                self.driver = "farm"
+            elif use_pipes:
+                self.driver = "pipes"
+            elif fm and dp:
+                self.driver = "device"
+            else:
+                self.driver = "host"
+                self.exact = self.exact or not fm
+            self.fast_mode = self.device_path = None
+            self.pipes_path = self.farm_path = None
+        if self.driver == "auto":
+            self.driver = ("farm" if self.num_engines > 1 else
+                           "pipes" if self.num_pipes > 1 else
+                           "host" if self.exact else "device")
+        if self.driver not in DRIVER_NAMES:
+            raise ValueError(
+                f"unknown driver {self.driver!r}; pick one of "
+                f"{('auto',) + DRIVER_NAMES}")
+        if self.num_engines > 1 and self.driver != "farm":
+            raise ValueError(
+                f"num_engines={self.num_engines} needs the engine-farm "
+                f"scan: use FenixConfig(driver=\"farm\") (a multi-engine "
+                f"pool cannot run on driver={self.driver!r})")
+        if self.num_pipes > 1 and self.driver not in ("pipes", "farm"):
+            raise ValueError(
+                f"num_pipes={self.num_pipes} needs a sharded driver: use "
+                f"FenixConfig(driver=\"pipes\") or driver=\"farm\" (not "
+                f"driver={self.driver!r})")
+        if self.exact and self.driver != "host":
+            raise ValueError(
+                "exact=True (per-packet scan admission) runs only on the "
+                "reference loop: use FenixConfig(driver=\"host\", "
+                f"exact=True), not driver={self.driver!r}")
 
 
 def pipe_mesh(num_pipes: int) -> Optional[Mesh]:
@@ -194,6 +288,13 @@ def _make_single_step(ecfg: EngineConfig, iocfg: vio.IOConfig,
     ``EngineConfig``): a pipe whose stream outlasts the uniform scan
     finishes its trailing batch through this function, draining only its
     own ring with its own 1/P budget share.
+
+    The chunk's ``"_cp"`` flag marks a T_w window boundary: the step then
+    folds the control-plane LUT rebuild + window reset into the scan carry
+    (``lax.cond`` after the service epilogue — the position the host
+    oracle applies it at, between batches), so a full trace replays with
+    zero host round trips.  Tail batches driven by the sharded drivers
+    pass ``_cp=False`` and roll the stacked window outside instead.
     """
     de_local = _make_pipe_local(ecfg, iocfg, tree, depth)
 
@@ -207,6 +308,9 @@ def _make_single_step(ecfg: EngineConfig, iocfg: vio.IOConfig,
         cls = model.infer(f2)
         dline = dl.push(dline, aux["now"] + loop_latency_us, s2, h2, cls,
                         cnt)
+        state = jax.lax.cond(
+            chunk["_cp"], lambda s: rl.control_plane_update(s, ecfg),
+            lambda s: s, state)
         stats = jnp.stack([aux["granted"], cnt, aux["classified"],
                            aux["n_tree"]])
         return (state, queues, dline), (aux["verdict"], stats)
@@ -273,6 +377,11 @@ def _make_pipes_step(cfg: "FenixConfig", lcfg: EngineConfig, model, tree,
         cls = model.infer(f2)
         dline = dl.push(dline, aux["now"] + cfg.loop_latency_us, s2, h2,
                         cls, cnt)
+        # in-scan control plane at T_w boundaries (applies to frozen pipes
+        # too — the host oracle rolled every pipe's window, active or not)
+        state = jax.lax.cond(
+            chunk["_cp"], lambda s: rl.control_plane_update(s, lcfg),
+            lambda s: s, state)
         stats = jnp.stack([aux["granted"], cnt, aux["classified"],
                            aux["n_tree"]])
         if masked:
@@ -358,16 +467,11 @@ class FenixSystem:
         # Model-Engine farm at exactly its service capacity
         self.n_est = n_est
         self.q_est_pps = q_est_pps
-        # farm driver iff requested (farm_path=True forces it at E=1)
-        self._use_farm = (cfg.farm_path if cfg.farm_path is not None
-                          else cfg.num_engines > 1)
-        if cfg.num_engines > 1 and not self._use_farm:
-            raise ValueError("num_engines > 1 requires the farm driver "
-                             "(farm_path must not be False)")
-        # sharded driver iff requested (pipes_path=True forces it at P=1);
-        # the farm rides on the pipes state layout, so it implies it
-        self._use_pipes = (cfg.pipes_path if cfg.pipes_path is not None
-                           else cfg.num_pipes > 1) or self._use_farm
+        # driver dispatch (FenixConfig.__post_init__ already resolved
+        # "auto" and validated the knob combinations); the farm rides on
+        # the pipes state layout, so it implies the sharded paths
+        self._use_farm = cfg.driver == "farm"
+        self._use_pipes = cfg.driver in ("pipes", "farm")
         # switch-side view of the engine pool: admission at E x one engine
         self.gcfg = farm_engine_config(cfg.engine, cfg.num_engines)
         self.lcfg = local_engine_config(self.gcfg, cfg.num_pipes)
@@ -385,6 +489,7 @@ class FenixSystem:
         self._farm_scan_jit = None
         self._farm_scan_masked_jit = None
         self._farm_tail_jit = None
+        self._cp_pipes_jit = None
         self.reset()
 
     def reset(self) -> None:
@@ -414,6 +519,11 @@ class FenixSystem:
                       "engine_q_depth_hist": [[0] * farm.DEPTH_BUCKETS
                                               for _ in
                                               range(cfg.num_engines)]}
+        # host-driven control-plane round trips this run: stays 0 on the
+        # device/pipes/farm drivers (their LUT rebuild runs inside the
+        # scan); each host-loop T_w rollover counts 1.  Kept outside
+        # ``stats`` so stats dicts stay bit-comparable across drivers.
+        self.host_syncs = 0
         # in-flight inference results, host view: (deliver_ts, slot, h, cls)
         self._inflight: List[Tuple[int, int, int, int]] = []
         # ... and the equivalent device-resident delay line
@@ -444,7 +554,7 @@ class FenixSystem:
             raise RuntimeError(
                 "step() drives the single-pipe host state, which the "
                 "sharded/farm drivers do not maintain; use run_trace() "
-                "with num_pipes>1 / pipes_path=True / num_engines>1")
+                "with driver=\"pipes\" / driver=\"farm\"")
         self._sync_inflight_to_host()
         n = len(packets["ts_us"])
         batch = {k: jnp.asarray(v) for k, v in packets.items()
@@ -452,7 +562,7 @@ class FenixSystem:
         now = int(packets["ts_us"][-1])
         # deliver finished inferences whose latency elapsed
         self._deliver(now)
-        if cfg.fast_mode:
+        if not cfg.exact:
             self.state, out = de.process_batch_fast(self.state, batch,
                                                     cfg.engine)
         else:
@@ -463,7 +573,7 @@ class FenixSystem:
         slots = np.asarray(out["slot"])[granted]
         hashes = np.asarray(out["hash"])[granted]
         feats = np.asarray(out["payload"])[granted]
-        if cfg.fast_mode and self.oracle is not None and \
+        if not cfg.exact and self.oracle is not None and \
                 "flow_idx" in packets:
             from repro.data.synthetic_traffic import ring_window
             fi = packets["flow_idx"][granted]
@@ -492,7 +602,7 @@ class FenixSystem:
             self.stats["served_per_engine"][0] += len(s2)
         # verdicts: flow-table class (post-delivery) else switch tree
         verdict = np.asarray(out["verdict"])
-        if self.tree is not None and cfg.fast_mode:
+        if self.tree is not None and not cfg.exact:
             from repro.core.data_engine.decision_tree import predict
             feats_now = np.stack([packets["pkt_len"],
                                   np.zeros(n, np.int32)], axis=-1)
@@ -522,17 +632,31 @@ class FenixSystem:
         self._inflight = remain
 
     def control_plane(self) -> None:
-        """T_w rollover: LUT refresh from observed (N, Q) + window reset."""
-        self.state = rl.control_plane_update(self.state, self.cfg.engine)
-        self.state = ft.window_reset(self.state, self.cfg.engine,
-                                     self.state["t_last"])
+        """T_w rollover driven from the host loop: LUT refresh from the
+        observed (N, Q) window counters + window reset.
+
+        Runs the exact same ``rl.control_plane_update`` the device drivers
+        fold into their scans — this host-driven invocation is the
+        bit-identity oracle for the in-scan rebuild, and each call counts
+        one host-side control-plane round trip in ``host_syncs`` (always 0
+        on the device/pipes/farm drivers)."""
+        self.host_syncs += 1
+        new = rl.control_plane_update(self.state, self.cfg.engine)
+        # run eagerly, the update aliases leaves (win_start IS t_last when
+        # t_last is already int32; the zeroed window counters can share a
+        # cached constant) — and the donated device scans reject donating
+        # one buffer twice, so re-materialize the scalar leaves
+        self.state = {k: (jnp.array(v) if getattr(v, "ndim", 1) == 0
+                          else v) for k, v in new.items()}
 
     def control_plane_pipes(self) -> None:
-        """T_w rollover across pipes: one LUT per pipe from that pipe's own
-        (N, Q) window counters, each anchored at the pipe's own clock."""
+        """T_w rollover across pipes, host-driven: one LUT per pipe from
+        that pipe's own (N, Q) window counters, each anchored at the pipe's
+        own clock.  Oracle path only — the sharded scans roll their
+        windows in-scan (``"_cp"``) without coming here."""
+        self.host_syncs += 1
         self.pstate = rl.control_plane_update_pipes(self.pstate, self.lcfg,
                                                     self.cfg.num_pipes)
-        self.pstate = ft.window_reset_pipes(self.pstate, self.lcfg)
 
     # -- in-flight state interop (host list <-> device delay line) ----------
     def _sync_inflight_to_host(self) -> None:
@@ -557,8 +681,12 @@ class FenixSystem:
             step = _make_single_step(self.cfg.engine, self.cfg.io,
                                      self.cfg.loop_latency_us, self.model,
                                      self.tree, self.tree_depth)
-            self._scan_jit = jax.jit(functools.partial(jax.lax.scan, step))
-            self._step_jit = jax.jit(step)
+            # the carry is donated: each scan/step call re-feeds the
+            # previous call's output carry, so the streaming driver can
+            # reuse the state/queue/delay-line buffers in place
+            self._scan_jit = jax.jit(functools.partial(jax.lax.scan, step),
+                                     donate_argnums=(0,))
+            self._step_jit = jax.jit(step, donate_argnums=(0,))
 
     def _ensure_pipe_jits(self) -> None:
         if self._pipe_scan_jit is None:
@@ -575,6 +703,14 @@ class FenixSystem:
                                      self.cfg.loop_latency_us, self.model,
                                      self.tree, self.tree_depth)
             self._pipe_tail_jit = jax.jit(tail)
+            self._ensure_cp_pipes_jit()
+
+    def _ensure_cp_pipes_jit(self) -> None:
+        # stacked-state window rollover for batch rounds that end outside
+        # the scan (per-pipe tails): jitted dispatch, no host round trip
+        if self._cp_pipes_jit is None:
+            self._cp_pipes_jit = jax.jit(
+                lambda st: rl.control_plane_update_pipes(st, self.lcfg))
 
     def _ensure_farm_jits(self) -> None:
         if self._farm_scan_jit is None:
@@ -590,52 +726,107 @@ class FenixSystem:
                     farm.make_farm_step(cfg.num_pipes, cfg.num_engines,
                                         cfg.io, base_rate,
                                         cfg.loop_latency_us, de_local,
-                                        self.model, self._mesh, masked)))
+                                        self.model, self._mesh, masked,
+                                        local_cfg=self.lcfg)))
 
             self._farm_scan_jit = mk(False)
             self._farm_scan_masked_jit = mk(True)
             self._farm_tail_jit = jax.jit(farm.make_farm_tail(
                 cfg.num_pipes, cfg.num_engines, cfg.io, base_rate,
                 cfg.loop_latency_us, de_local, self.model))
+            self._ensure_cp_pipes_jit()
 
     # -- full-trace drivers --------------------------------------------------
-    def run_trace(self, stream: Optional[Dict[str, np.ndarray]] = None,
-                  labels_by_flow: Optional[np.ndarray] = None,
-                  source=None, adapter=None,
-                  trace_labels="auto", limit: Optional[int] = None
-                  ) -> Dict[str, np.ndarray]:
+    def run_trace(self, trace=None, *, stream=None, labels_by_flow=None,
+                  source=None, adapter=None, trace_labels="auto",
+                  limit: Optional[int] = None) -> Dict[str, np.ndarray]:
         """Feed a packet stream; returns per-packet verdicts.
 
-        The trace comes either from ``stream`` (a packet_stream dict, the
-        historical form) or from ``source`` — a capture path (raw pcap or
-        CSV) ingested through :mod:`repro.data.trace_ingest`; ``adapter``
-        names the CSV schema (``generic``/``iscx_vpn``/``ustc_tfc``),
-        ``trace_labels`` the pcap ground-truth sidecar (default: the
-        ``<pcap>.labels.csv`` convention), and ``limit`` truncates the
-        capture without reading the rest of it.
+        ``trace`` is one of:
 
-        Fast mode with ``device_path`` runs the jitted scan driver —
-        sharded over the pipe mesh when multi-pipeline mode is on; scan
-        (exact) mode and ``device_path=False`` use the host loop.
+        * a packet-stream dict (``synthetic_traffic.packet_stream`` or
+          ``trace_ingest.load_stream`` output),
+        * a capture path — raw pcap or CSV, ingested through
+          :mod:`repro.data.trace_ingest` with default settings, or
+        * a :class:`repro.data.trace_ingest.TraceSpec` naming the capture
+          plus its adapter / labels / limit / chunking / overlap options.
+
+        Path and TraceSpec traces run the streaming driver on
+        ``driver="device"``: a producer thread parses the next capture
+        chunk and stages it on device while the scan consumes the current
+        one, so parse time hides under compute
+        (``TraceSpec(overlap=False)`` forces synchronous staging).  The
+        sharded drivers route packets to pipes globally, so they load the
+        capture fully first; the host loop does too.
+
+        The pre-TraceSpec keywords (``stream=``, ``source=``,
+        ``adapter=``, ``trace_labels=``, ``limit=``, ``labels_by_flow=``)
+        are deprecated spellings of the same thing and map onto
+        ``trace=``.
         """
-        if (stream is None) == (source is None):
-            raise ValueError(
-                "run_trace needs exactly one of stream= or source=")
-        if source is not None:
-            from repro.data import trace_ingest
-            stream = trace_ingest.load_stream(source, adapter=adapter,
-                                              labels=trace_labels,
-                                              limit=limit)
-        cfg = self.cfg
+        trace = self._resolve_trace(trace, stream, labels_by_flow, source,
+                                    adapter, trace_labels, limit)
+        if isinstance(trace, TraceSpec) and self.cfg.driver == "device" \
+                and self.oracle is None:
+            return self._run_trace_device_stream(trace)
+        stream = trace if isinstance(trace, dict) else trace.load()
         if self._use_pipes:
-            if not (cfg.fast_mode and cfg.device_path):
-                raise RuntimeError("multi-pipeline / engine-farm mode "
-                                   "requires fast_mode and device_path")
             return self._run_trace_pipes(stream)
-        if not (cfg.fast_mode and cfg.device_path):
+        if self.cfg.driver == "host":
             return self._run_trace_host(stream)
+        return self._run_trace_device(stream)
+
+    def _resolve_trace(self, trace, stream, labels_by_flow, source,
+                       adapter, trace_labels, limit):
+        """Map run_trace's argument surface onto one dict-or-TraceSpec."""
+        used = [name for name, passed in
+                (("stream", stream is not None),
+                 ("source", source is not None),
+                 ("adapter", adapter is not None),
+                 ("trace_labels", trace_labels != "auto"),
+                 ("limit", limit is not None),
+                 ("labels_by_flow", labels_by_flow is not None)) if passed]
+        if used:
+            warnings.warn(
+                "run_trace(" + "=..., ".join(used) + "=...) is "
+                "deprecated; pass run_trace(trace=<packet-stream dict | "
+                "capture path | TraceSpec>)", DeprecationWarning,
+                stacklevel=3)
+        given = [t for t in (trace, stream, source) if t is not None]
+        if len(given) != 1:
+            raise ValueError(
+                "run_trace needs exactly one trace: trace= (a "
+                "packet-stream dict, a capture path, or a TraceSpec); "
+                "stream=/source= are its deprecated spellings")
+        trace = given[0]
+        if isinstance(trace, (dict, TraceSpec)):
+            return trace
+        # a capture path (or open file object): wrap it, folding in any
+        # deprecated per-call options
+        return TraceSpec(trace, adapter=adapter, labels=trace_labels,
+                         limit=limit)
+
+    def _accum_device_stats(self, n: int, n_batches: int,
+                            stat_sum: np.ndarray) -> None:
+        self.stats["packets"] += n
+        self.stats["granted"] += int(stat_sum[0])
+        self.stats["inferences"] += int(stat_sum[1])
+        self.stats["classified_pkts"] += int(stat_sum[2])
+        self.stats["tree_pkts"] += int(stat_sum[3])
+        self.stats["dropped_q"] = int(self.queues["dropped"])
+        self.stats["dropped_inflight"] = int(self._dl["dropped"])
+        self.stats["served_per_engine"][0] += int(stat_sum[1])
+        self.stats["engine_q_depth_hist"][0][0] += n_batches
+
+    def _run_trace_device(self, stream: Dict[str, np.ndarray]
+                          ) -> Dict[str, np.ndarray]:
+        """Single-pipe device driver, in-memory trace: ONE jitted
+        ``lax.scan`` over every full chunk, with the control-plane LUT
+        rebuild folded into the scan at T_w boundaries (the ``"_cp"``
+        channel) — zero host syncs regardless of trace length."""
+        cfg = self.cfg
         n = len(stream["ts_us"])
-        B = cfg.batch_size
+        B, cpe = cfg.batch_size, cfg.control_plane_every
         arrs = {k: jnp.asarray(stream[k]) for k in PKT_KEYS}
         if self.oracle is not None and "flow_idx" in stream:
             from repro.data.synthetic_traffic import oracle_payloads
@@ -648,45 +839,166 @@ class FenixSystem:
         chunked = {k: v[:n_chunks * B].reshape((n_chunks, B)
                                                + v.shape[1:])
                    for k, v in arrs.items()}
+        chunked["_cp"] = jnp.asarray(
+            (np.arange(1, n_chunks + 1) % cpe) == 0)
         tail = ({k: v[n_chunks * B:] for k, v in arrs.items()}
                 if n_chunks * B < n else None)
         carry = (self.state, self.queues, self._dl)
-        cpe = cfg.control_plane_every
-        verd_parts: List[np.ndarray] = []
+        verd_parts: List[jax.Array] = []
         stat_sum = np.zeros(4, np.int64)
-        for g in range(0, n_chunks, cpe):
-            hi = min(g + cpe, n_chunks)
-            window = {k: v[g:hi] for k, v in chunked.items()}
-            carry, (vd, st) = self._scan_jit(carry, window)
-            verd_parts.append(np.asarray(vd).reshape(-1))
+        if n_chunks:
+            carry, (vd, st) = self._scan_jit(carry, chunked)
+            verd_parts.append(vd.reshape(-1))
             stat_sum += np.asarray(st).astype(np.int64).sum(axis=0)
-            self.state, self.queues, self._dl = carry
-            if hi % cpe == 0:
-                # the single host sync per control-plane window
-                self.control_plane()
-                carry = (self.state, self.queues, self._dl)
         n_batches = n_chunks
         if tail is not None:
-            carry, (vd, st) = self._step_jit(carry, tail)
-            verd_parts.append(np.asarray(vd))
-            stat_sum += np.asarray(st).astype(np.int64)
-            self.state, self.queues, self._dl = carry
             n_batches += 1
-            if n_batches % cpe == 0:
-                self.control_plane()
+            tail["_cp"] = jnp.asarray(n_batches % cpe == 0)
+            carry, (vd, st) = self._step_jit(carry, tail)
+            verd_parts.append(vd)
+            stat_sum += np.asarray(st).astype(np.int64)
+        self.state, self.queues, self._dl = carry
         self._dl_dirty = True
-        self.stats["packets"] += n
-        self.stats["granted"] += int(stat_sum[0])
-        self.stats["inferences"] += int(stat_sum[1])
-        self.stats["classified_pkts"] += int(stat_sum[2])
-        self.stats["tree_pkts"] += int(stat_sum[3])
-        self.stats["dropped_q"] = int(self.queues["dropped"])
-        self.stats["dropped_inflight"] = int(self._dl["dropped"])
-        self.stats["served_per_engine"][0] += int(stat_sum[1])
-        self.stats["engine_q_depth_hist"][0][0] += n_batches
-        verdicts = (np.concatenate(verd_parts).astype(np.int32)
-                    if verd_parts else np.full(n, -1, np.int32))
+        self._accum_device_stats(n, n_batches, stat_sum)
+        verdicts = (np.concatenate([np.asarray(v) for v in verd_parts])
+                    .astype(np.int32) if verd_parts
+                    else np.full(n, -1, np.int32))
         return {"verdict": verdicts}
+
+    # chunks staged per streaming block: control_plane_every scan steps x
+    # this many windows — big enough to amortize dispatch, small enough
+    # that double-buffering two in-flight blocks stays cheap
+    _STAGE_WINDOWS = 4
+
+    def _run_trace_device_stream(self, spec: TraceSpec
+                                 ) -> Dict[str, np.ndarray]:
+        """Single-pipe device driver over a capture that is never fully
+        resident: consume fixed-shape [W, B] blocks as a producer stages
+        them (``TraceSpec.overlap`` double-buffers parse + ``device_put``
+        in a background thread; ``overlap=False`` stages synchronously
+        between scans).  The in-scan ``"_cp"`` control plane carries over
+        unchanged — still zero host syncs, and the donated carry lets
+        consecutive blocks reuse the same state buffers."""
+        self._sync_inflight_to_device()
+        self._ensure_jits()
+        carry = (self.state, self.queues, self._dl)
+        verd_parts: List[jax.Array] = []
+        stat_sum = np.zeros(4, np.int64)
+        n = 0
+        n_batches = 0
+        B = self.cfg.batch_size
+        for kind, block in self._staged_blocks(spec):
+            if kind == "block":
+                steps = block["_cp"].shape[0]
+                carry, (vd, st) = self._scan_jit(carry, block)
+                verd_parts.append(vd.reshape(-1))
+                stat_sum += np.asarray(st).astype(np.int64).sum(axis=0)
+                n += steps * B
+                n_batches += steps
+            else:                                   # trailing < B packets
+                n += int(block["ts_us"].shape[0])
+                n_batches += 1
+                carry, (vd, st) = self._step_jit(carry, block)
+                verd_parts.append(vd)
+                stat_sum += np.asarray(st).astype(np.int64)
+        self.state, self.queues, self._dl = carry
+        self._dl_dirty = True
+        self._accum_device_stats(n, n_batches, stat_sum)
+        verdicts = (np.concatenate([np.asarray(v) for v in verd_parts])
+                    .astype(np.int32) if verd_parts
+                    else np.full(0, -1, np.int32))
+        return {"verdict": verdicts}
+
+    def _stage_gen(self, spec: TraceSpec):
+        """Parse the capture chunk-wise and re-batch it into staged
+        ("block", {[W, B] columns + "_cp" [W]}) items plus one final
+        ("tail", {[<B] columns + scalar "_cp"}).  Each item is already on
+        device (``jax.device_put``) when yielded — this is the half the
+        ingest thread overlaps with the scans."""
+        B, cpe = self.cfg.batch_size, self.cfg.control_plane_every
+        W = cpe * self._STAGE_WINDOWS
+        pend = {k: [] for k in PKT_KEYS}
+        pend_n = 0
+        chunk_i = 0                     # global batch counter, drives _cp
+
+        def emit(cols, steps):
+            nonlocal chunk_i
+            block = {k: jax.device_put(
+                np.ascontiguousarray(cols[k][:steps * B])
+                .reshape(steps, B)) for k in PKT_KEYS}
+            block["_cp"] = jax.device_put(
+                (np.arange(chunk_i + 1, chunk_i + steps + 1) % cpe) == 0)
+            chunk_i += steps
+            return "block", block
+
+        for raw in spec.iter_chunks():
+            for k in PKT_KEYS:
+                pend[k].append(np.asarray(raw[k]))
+            pend_n += len(raw["ts_us"])
+            while pend_n >= W * B:
+                cols = {k: np.concatenate(pend[k]) for k in PKT_KEYS}
+                yield emit(cols, W)
+                pend = {k: [cols[k][W * B:]] for k in PKT_KEYS}
+                pend_n -= W * B
+        if pend_n:
+            cols = {k: np.concatenate(pend[k]) for k in PKT_KEYS}
+            steps = pend_n // B
+            if steps:
+                yield emit(cols, steps)
+            if pend_n > steps * B:
+                tail = {k: jax.device_put(cols[k][steps * B:])
+                        for k in PKT_KEYS}
+                tail["_cp"] = jax.device_put(
+                    np.bool_((chunk_i + 1) % cpe == 0))
+                yield "tail", tail
+
+    def _staged_blocks(self, spec: TraceSpec):
+        """Yield `_stage_gen` items, double-buffered through a bounded
+        queue when ``spec.overlap`` — the producer thread parses and
+        stages block k+1 while the caller scans block k."""
+        gen = self._stage_gen(spec)
+        if not spec.overlap:
+            yield from gen
+            return
+        q: queue_mod.Queue = queue_mod.Queue(maxsize=2)
+        stop = threading.Event()
+        err: List[BaseException] = []
+
+        def produce():
+            try:
+                for item in gen:
+                    while not stop.is_set():
+                        try:
+                            q.put(item, timeout=0.1)
+                            break
+                        except queue_mod.Full:
+                            continue
+                    if stop.is_set():
+                        return
+            except BaseException as e:  # surfaced on the consumer side
+                err.append(e)
+            finally:
+                while not stop.is_set():    # sentinel, unless aborting
+                    try:
+                        q.put(None, timeout=0.1)
+                        break
+                    except queue_mod.Full:
+                        continue
+
+        t = threading.Thread(target=produce, daemon=True,
+                             name="fenix-trace-ingest")
+        t.start()
+        try:
+            while True:
+                item = q.get()
+                if item is None:
+                    break
+                yield item
+        finally:
+            stop.set()
+            t.join()
+        if err:
+            raise err[0]
 
     def _run_trace_host(self, stream: Dict[str, np.ndarray]
                         ) -> Dict[str, np.ndarray]:
@@ -783,6 +1095,11 @@ class FenixSystem:
         active = (np.arange(n_chunks)[None, :]
                   < chunks_p[:, None]).T.copy()             # [C, P]
         chunked = {k: jnp.asarray(v[idx]) for k, v in arrs.items()}
+        # in-scan control-plane flags: chunk i closes a T_w window when
+        # (i+1) % cpe == 0, for every pipe (frozen ones included)
+        chunked["_cp"] = jnp.asarray(np.repeat(
+            ((np.arange(1, n_chunks + 1) % cpe) == 0)[:, None],
+            num_pipes, axis=1))                             # [C, P]
         j_active = jnp.asarray(active)
         carry = (self.pstate, self.pqueues, self.pdl)
         if self._mesh is not None:
@@ -798,10 +1115,16 @@ class FenixSystem:
                 espec = NamedSharding(self._mesh, PartitionSpec("engine"))
                 eq = jax.tree.map(lambda x: jax.device_put(x, espec), eq)
             carry = carry + (eq,)
-        verd_parts: List[np.ndarray] = []                   # [*, P, B] blocks
+        verd_parts: List[jax.Array] = []                    # [*, P, B] blocks
+        stat_rows: List[jax.Array] = []
+        served_rows: List[jax.Array] = []
         stat_sum = np.zeros(4, np.int64)
         served_sum = np.zeros(num_engines, np.int64)
         depth_rows: List[np.ndarray] = []                   # [*, E] samples
+        # the control plane runs in-scan ("_cp" above): the windowed loop
+        # exists only to pick the masked/plain scan variant per window —
+        # every output stays a device array until after the loop, so the
+        # whole uniform part dispatches with zero host syncs
         for g in range(0, n_chunks, cpe):
             hi = min(g + cpe, n_chunks)
             window = {k: v[g:hi] for k, v in chunked.items()}
@@ -812,23 +1135,25 @@ class FenixSystem:
                 window["_active"] = j_active[g:hi]
             if use_farm:
                 carry, (vd, st3, served, depth) = scan(carry, window)
-                served_w = np.asarray(served).astype(np.int64)     # [W, E]
-                served_sum += served_w.sum(axis=0)
-                depth_rows.append(np.asarray(depth).astype(np.int64))
-                st3 = np.asarray(st3).astype(np.int64).sum(axis=0)
-                stat_sum += np.asarray([st3[0], served_w.sum(),
-                                        st3[1], st3[2]])
-                self.pstate, self.pqueues, self.pdl, self.eq = carry
+                served_rows.append(served)
+                depth_rows.append(depth)
+                stat_rows.append(st3)
             else:
                 carry, (vd, st) = scan(carry, window)
+                stat_rows.append(st)
+            verd_parts.append(vd)
+        if use_farm:
+            for st3, served in zip(stat_rows, served_rows):
+                served_w = np.asarray(served).astype(np.int64)     # [W, E]
+                served_sum += served_w.sum(axis=0)
+                s3 = np.asarray(st3).astype(np.int64).sum(axis=0)
+                stat_sum += np.asarray([s3[0], served_w.sum(),
+                                        s3[1], s3[2]])
+            depth_rows = [np.asarray(d).astype(np.int64)
+                          for d in depth_rows]
+        else:
+            for st in stat_rows:
                 stat_sum += np.asarray(st).astype(np.int64).sum(axis=0)
-                self.pstate, self.pqueues, self.pdl = carry
-            verd_parts.append(np.asarray(vd))
-            if hi % cpe == 0:
-                # the single host sync per control-plane window
-                self.control_plane_pipes()
-                carry = (self.pstate, self.pqueues, self.pdl) \
-                    + ((self.eq,) if use_farm else ())
         if use_farm:
             self.pstate, self.pqueues, self.pdl, self.eq = carry
         else:
@@ -848,6 +1173,9 @@ class FenixSystem:
             lo = starts[p] + chunks_p[p] * B
             sel = order[lo:starts[p] + counts[p]]
             batch = {k: jnp.asarray(v[sel]) for k, v in arrs.items()}
+            # the stacked window rolls once after ALL tails (below), not
+            # per-pipe inside the tail step
+            batch["_cp"] = jnp.asarray(False)
             carry_p = jax.tree.map(
                 lambda x: x[p], (self.pstate, self.pqueues, self.pdl))
             if use_farm:
@@ -868,11 +1196,14 @@ class FenixSystem:
                     self.eq["tail"] - self.eq["head"],
                     np.int64).reshape(1, num_engines))
             if n_batches % cpe == 0:
-                self.control_plane_pipes()
+                # T_w rollover after the tail round: jitted dispatch onto
+                # the stacked state — still no host round trip
+                self.pstate = self._cp_pipes_jit(self.pstate)
         # scatter verdicts back to arrival order (masked scan rows are
         # replayed dummies — only each pipe's first chunks_p[p] rows count)
         verdicts = np.full(n, -1, np.int32)
-        scan_vd = (np.concatenate(verd_parts, axis=0) if verd_parts
+        scan_vd = (np.concatenate([np.asarray(v) for v in verd_parts],
+                                  axis=0) if verd_parts
                    else np.zeros((0, num_pipes, B), np.int32))
         for p in range(num_pipes):
             seq = [scan_vd[:chunks_p[p], p, :].reshape(-1)] + rem_verds[p]

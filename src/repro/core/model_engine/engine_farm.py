@@ -49,6 +49,7 @@ try:                                    # moved out of experimental in newer jax
 except ImportError:
     from jax.experimental.shard_map import shard_map
 
+from repro.core.data_engine import rate_limiter as rl
 from repro.core.model_engine import delay_line as dl
 from repro.core.model_engine import vector_io as vio
 
@@ -137,7 +138,8 @@ def gather_results(res_pipe: jax.Array, res_n: jax.Array,
 
 def make_farm_step(num_pipes: int, num_engines: int, iocfg: vio.IOConfig,
                    base_rate_per_us: float, loop_latency_us: int,
-                   de_local, model, mesh: Optional[Mesh], masked: bool):
+                   de_local, model, mesh: Optional[Mesh], masked: bool,
+                   local_cfg=None):
     """One scan step of the farm driver: sharded pipes feeding E engines.
 
     ``de_local`` is the pipe-local Data-Engine body (built by
@@ -146,6 +148,15 @@ def make_farm_step(num_pipes: int, num_engines: int, iocfg: vio.IOConfig,
     engine's budget uses it directly, so the farm's aggregate service is
     ``num_engines`` times the pipes driver's single budget and
     ``num_engines=1`` reproduces that budget bit-for-bit.
+
+    ``local_cfg`` is the per-pipe ``EngineConfig`` the in-scan control
+    plane rebuilds each pipe's admission LUT with when the chunk's
+    ``"_cp"`` flag marks a T_w window boundary (``lax.cond`` at the end of
+    the cell, after the freeze-select, so frozen pipes roll their windows
+    too — exactly when the old host-side rebuild ran).  The update is a
+    pure function of the pipe's own switch state, so it is engine-invariant
+    by construction (required: ``pstate`` is replicated over the
+    ``"engine"`` axis).
 
     The cell function below is written per (pipe, engine) coordinate and
     runs either under ``shard_map`` on the 2-D mesh or under nested
@@ -166,6 +177,7 @@ def make_farm_step(num_pipes: int, num_engines: int, iocfg: vio.IOConfig,
     serve_lanes = vio.engine_serve_lanes(iocfg, num_pipes)
 
     def cell_step(pstate, pqueues, pdline, eq, chunk):
+        cp = chunk["_cp"]
         # -- pipe-local switch stage (varies over "pipe" only) --------------
         if masked:
             active = chunk["_active"]
@@ -250,6 +262,11 @@ def make_farm_step(num_pipes: int, num_engines: int, iocfg: vio.IOConfig,
             push_ts = aux["now"] + loop_latency_us
         pdline = dl.push(pdline, push_ts, sel_s, sel_h, sel_c, my_cnt,
                          engines=sel_e)
+        # in-scan control plane: rebuild this pipe's LUT + roll its window
+        # when the chunk closes a T_w window — no host round trip
+        pstate = jax.lax.cond(
+            cp, lambda s: rl.control_plane_update(s, local_cfg),
+            lambda s: s, pstate)
         pstats = jnp.stack([aux["granted"], aux["classified"],
                             aux["n_tree"]])
         if masked:

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -73,6 +74,55 @@ def build_lut(n: float, q: float, v: float,
     tt, cc = np.meshgrid(ti, cj, indexing="ij")
     p = probability(tt, cc, n=n, q=q, v=v)
     return np.round(p * ((1 << cfg.prob_bits) - 1)).astype(np.int32)
+
+
+def probability_jnp(t, c, n, q, v):
+    """Eq. 2 as a traceable jnp function (float32) — the on-device mirror
+    of :func:`probability`, used by the in-scan control-plane rebuild.
+
+    Bit-compatibility with the float64 numpy path is asserted empirically
+    (tests/test_probability.py): every quantized LUT entry the two builds
+    produce is identical, because Eq. 2's ramps keep the probabilities far
+    from the 16-bit rounding boundaries relative to float32 error.
+    """
+    f32 = jnp.float32
+    t = jnp.asarray(t, f32)
+    c = jnp.maximum(jnp.asarray(c, f32), f32(1e-12))
+    n = jnp.asarray(n, f32)
+    q = jnp.asarray(q, f32)
+    v = jnp.asarray(v, f32)
+    qt = q * t
+    nc = n * c
+    denom = qt - nc
+    slow = c * (v * t - n) / jnp.where(jnp.abs(denom) < 1e-9,
+                                       jnp.inf, denom)
+    fast = t * (v * c - q) / jnp.where(jnp.abs(denom) < 1e-9,
+                                       jnp.inf, -denom)
+    p = jnp.where(denom > 1e-9, slow,
+                  jnp.where(denom < -1e-9, fast,
+                            (t >= n / v).astype(f32)))
+    return jnp.clip(p, 0.0, 1.0)
+
+
+def build_lut_jnp(flow_cnt, win_pkt_cnt, window_us: int, v: float,
+                  cfg: LUTConfig = LUTConfig()):
+    """Traceable LUT build straight from the window counters.
+
+    The (N, Q) clamping happens INSIDE the traced function — the host
+    oracle and the on-device rebuild both feed raw int32 ``flow_cnt`` /
+    ``win_pkt_cnt``, so the two paths share every rounding step and the
+    tables they produce are bit-identical (the conformance suite's
+    host-vs-device invariant).  ``window_us`` and ``v`` are static config.
+    """
+    f32 = jnp.float32
+    n = jnp.maximum(jnp.asarray(flow_cnt).astype(f32), f32(1.0))
+    q = jnp.maximum(jnp.asarray(win_pkt_cnt).astype(f32), f32(1.0)) \
+        / f32(max(float(window_us), 1.0))
+    ti = (jnp.arange(cfg.t_bins, dtype=f32) + 0.5) * (1 << cfg.t_shift)
+    cj = (jnp.arange(cfg.c_bins, dtype=f32) + 0.5) * (1 << cfg.c_shift)
+    tt, cc = jnp.meshgrid(ti, cj, indexing="ij")
+    p = probability_jnp(tt, cc, n, q, v)
+    return jnp.round(p * ((1 << cfg.prob_bits) - 1)).astype(jnp.int32)
 
 
 def lut_lookup_np(lut: np.ndarray, t_us: np.ndarray, c: np.ndarray,

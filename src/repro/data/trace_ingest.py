@@ -25,6 +25,7 @@ examples/trace_smoke.py).
 from __future__ import annotations
 
 import csv
+import dataclasses
 import os
 import struct
 from typing import Dict, Iterator, List, Mapping, Optional, Tuple, Union
@@ -525,3 +526,73 @@ def load_flows(source, adapter: Union[None, str, tf.CsvSchema] = None,
         return flows_from_stream(ingest_pcap(source, labels=labels,
                                              limit=limit))
     return tf.flows_from_csv(source, adapter or "generic")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """Declarative trace handle for ``FenixSystem.run_trace(trace=...)``.
+
+    Bundles a capture source with its ingestion options — the single
+    replacement for the deprecated ``run_trace(source=, adapter=,
+    trace_labels=, limit=)`` keyword pile.  ``load()`` materializes the
+    full packet stream (what the host/pipes/farm drivers and training
+    consume); ``iter_chunks()`` streams it in bounded column chunks,
+    which is what the device driver's double-buffered ingest pipelines
+    against the compiled scan.
+    """
+    # capture path (pcap or CSV), open binary file object, or an
+    # already-parsed packet-stream dict (degenerate parse-free streaming)
+    source: object
+    # CSV schema name / CsvSchema (ignored for pcaps); default "generic"
+    adapter: Union[None, str, "tf.CsvSchema"] = None
+    # pcap ground-truth sidecar: path, mapping, "auto" (the
+    # <pcap>.labels.csv convention), or None.  Only load() consumes it —
+    # the data plane's 7 packet columns carry no labels.
+    labels: Union[None, str, Mapping] = "auto"
+    # truncate after this many packets without reading the rest
+    limit: Optional[int] = None
+    # packets per parsed chunk (streaming granularity and memory bound)
+    chunk_pkts: int = 65536
+    # let run_trace double-buffer: parse + device staging of chunk k+1 in
+    # a background thread while the device scans chunk k.  False forces
+    # synchronous staging (the bench_soak comparison baseline).
+    overlap: bool = True
+
+    def load(self) -> Dict[str, np.ndarray]:
+        """Materialize the whole capture as one packet_stream dict."""
+        return load_stream(self.source, adapter=self.adapter,
+                           labels=self.labels, limit=self.limit,
+                           chunk_pkts=self.chunk_pkts)
+
+    def iter_chunks(self) -> Iterator[Dict[str, np.ndarray]]:
+        """Stream the capture as column-dict chunks of at most
+        ``chunk_pkts`` packets, honoring ``limit``.
+
+        pcap sources stream incrementally (captures larger than host
+        memory work); CSV and dict sources load once and slice — the
+        chunking still lets the consumer overlap staging with compute.
+        """
+        streamable = not isinstance(self.source, dict) and (
+            hasattr(self.source, "read") or _looks_like_pcap(self.source))
+        if streamable:
+            kept = 0
+            for chunk in iter_pcap_packets(self.source,
+                                           chunk_pkts=self.chunk_pkts):
+                if self.limit is not None and \
+                        kept + len(chunk["ts_us"]) > self.limit:
+                    chunk = {k: v[:self.limit - kept]
+                             for k, v in chunk.items()}
+                if len(chunk["ts_us"]):
+                    yield chunk
+                kept += len(chunk["ts_us"])
+                if self.limit is not None and kept >= self.limit:
+                    return
+            return
+        stream = (self.source if isinstance(self.source, dict)
+                  else self.load())
+        n = len(stream["ts_us"])
+        if self.limit is not None:
+            n = min(n, self.limit)
+        for lo in range(0, n, self.chunk_pkts):
+            yield {k: np.asarray(v)[lo:min(lo + self.chunk_pkts, n)]
+                   for k, v in stream.items()}

@@ -31,15 +31,14 @@ LIMIT = 1800           # not a multiple of BATCH: tails covered everywhere
 # every driver the system has; the degenerate sharded forms are the ones
 # that must be bit-identical to the host loop
 DRIVERS = {
-    "host": dict(device_path=False),
-    "device": dict(),
-    "pipes": dict(num_pipes=1, pipes_path=True),
-    "farm": dict(num_pipes=1, num_engines=1, pipes_path=True,
-                 farm_path=True),
+    "host": dict(driver="host"),
+    "device": dict(driver="device"),
+    "pipes": dict(driver="pipes", num_pipes=1),
+    "farm": dict(driver="farm", num_pipes=1, num_engines=1),
 }
 MULTI = {
-    "pipes2": dict(num_pipes=2),
-    "farm2x2": dict(num_pipes=2, num_engines=2, farm_path=True),
+    "pipes2": dict(driver="pipes", num_pipes=2),
+    "farm2x2": dict(driver="farm", num_pipes=2, num_engines=2),
 }
 BACKENDS = ("ref", "pallas")
 
@@ -62,8 +61,13 @@ def _replay(trace, driver_kw, backend, key):
                         gate_backend=backend, **driver_kw),
             ByLenModel())
         out = sys_.run_trace(dict(trace))
-        _cache[key] = (np.asarray(out["verdict"]), sys_.stats)
-    return _cache[key]
+        _cache[key] = (np.asarray(out["verdict"]), sys_.stats,
+                       sys_.host_syncs)
+    return _cache[key][:2]
+
+
+def _host_syncs(key):
+    return _cache[key][2]
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
@@ -79,6 +83,11 @@ def test_driver_conforms_to_host(trace, driver, backend):
     assert s == s_ref
     assert s["served_per_engine"] == s_ref["served_per_engine"]
     assert s["inferences"] == s_ref["inferences"]
+    # the device drivers fold the control-plane LUT rebuild into the scan:
+    # identical results, zero host-driven control-plane round trips —
+    # while the oracle syncs once per T_w window
+    assert _host_syncs((driver, backend)) == 0
+    assert _host_syncs(("host", backend)) == LIMIT // (BATCH * CPE)
 
 
 @pytest.mark.parametrize("driver", sorted(DRIVERS))

@@ -148,7 +148,7 @@ def small_system():
 def _fresh(model, tree, oracle, device, batch_size=512, cpe=3):
     return FenixSystem(
         FenixConfig(batch_size=batch_size, control_plane_every=cpe,
-                    device_path=device),
+                    driver="device" if device else "host"),
         model, tree=tree, oracle_windows=oracle)
 
 

@@ -1,0 +1,207 @@
+"""The ``FenixConfig(driver=...)`` selector and its deprecation shim.
+
+The pre-driver= API selected the trace driver through four interacting
+booleans (``fast_mode``/``device_path``/``pipes_path``/``farm_path``).
+This suite pins the redesign's contract:
+
+* every legacy boolean combination (the full 4-bool cube, all 16 combos
+  explicitly passed) resolves to the same driver as its ``driver=``
+  equivalent — or raises the same conflict error the new API defines;
+* the shim warns with ``DeprecationWarning`` exactly once per construct
+  (and ``FenixSystem``'s internal ``dataclasses.replace`` does not
+  re-warn);
+* conflicting knob combinations raise ``ValueError`` messages that name
+  the ``driver=`` spelling, not the deprecated booleans;
+* the device-family drivers replay traces with zero host-driven
+  control-plane syncs (``FenixSystem.host_syncs``) while the host oracle
+  syncs once per T_w window;
+* ``run_trace``'s legacy keyword pile (``stream=``/``source=``/...) maps
+  onto ``trace=`` with a deprecation warning.
+
+This file and the shim itself are the only places in the repo allowed to
+spell the deprecated kwargs (enforced by tools/check_deprecated.py).
+"""
+
+import itertools
+import os
+import tempfile
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.fenix import FenixConfig, FenixSystem, TraceSpec
+from repro.core.model_engine.inference import ByLenModel
+from repro.data import trace_ingest as ti
+from repro.data.synthetic_traffic import make_flows, packet_stream
+
+LEGACY = ("fast_mode", "device_path", "pipes_path", "farm_path")
+
+
+def _legacy_expectation(fm, dp, pp, fp):
+    """The old boolean-cube resolution, spelled as (driver, exact) or
+    ValueError for the combos the redesign (correctly) rejects."""
+    if (pp or fp) and not (fm and dp):
+        return ValueError
+    if fp:
+        return ("farm", False)
+    if pp:
+        return ("pipes", False)
+    if fm and dp:
+        return ("device", False)
+    return ("host", not fm)
+
+
+@pytest.mark.parametrize("fm,dp,pp,fp", list(itertools.product(
+    (False, True), repeat=4)))
+def test_legacy_cube_resolves_like_driver_equivalent(fm, dp, pp, fp):
+    """Property over the whole 4-bool cube: the shim lands on exactly the
+    driver/exact pair the new spelling produces (or both reject)."""
+    expect = _legacy_expectation(fm, dp, pp, fp)
+    if expect is ValueError:
+        with pytest.raises(ValueError, match="driver"):
+            FenixConfig(fast_mode=fm, device_path=dp, pipes_path=pp,
+                        farm_path=fp)
+        return
+    driver, exact = expect
+    with pytest.warns(DeprecationWarning):
+        legacy = FenixConfig(fast_mode=fm, device_path=dp, pipes_path=pp,
+                             farm_path=fp)
+    modern = FenixConfig(driver=driver, exact=exact)
+    assert (legacy.driver, legacy.exact) == (modern.driver, modern.exact)
+    # the legacy fields are normalized away after resolution
+    assert all(getattr(legacy, k) is None for k in LEGACY)
+
+
+def test_auto_resolution():
+    assert FenixConfig().driver == "device"
+    assert FenixConfig(exact=True).driver == "host"
+    assert FenixConfig(num_pipes=2).driver == "pipes"
+    assert FenixConfig(num_engines=2).driver == "farm"
+    assert FenixConfig(num_pipes=2, num_engines=2).driver == "farm"
+
+
+def test_shim_warns_exactly_once_per_construct():
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        FenixConfig(device_path=False)
+    assert len([w for w in rec
+                if issubclass(w.category, DeprecationWarning)]) == 1
+    # a resolved config re-entering __post_init__ (dataclasses.replace
+    # inside FenixSystem, e.g. for gate_backend folding) must not re-warn
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        with pytest.warns(DeprecationWarning):
+            cfg = FenixConfig(batch_size=64, device_path=False,
+                              gate_backend="ref")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        FenixSystem(cfg, ByLenModel())
+    assert not [w for w in rec
+                if issubclass(w.category, DeprecationWarning)]
+
+
+def test_conflicting_knobs_raise_with_driver_spelling():
+    # the old farm_path=False + num_engines>1 bug, now caught up front
+    with pytest.raises(ValueError, match=r'driver="farm"'):
+        FenixConfig(num_engines=2, farm_path=False)
+    with pytest.raises(ValueError, match=r'driver="farm"'):
+        FenixConfig(num_engines=2, driver="device")
+    with pytest.raises(ValueError, match=r'driver="pipes"'):
+        FenixConfig(num_pipes=2, driver="host")
+    # scan (exact) admission off the host loop
+    with pytest.raises(ValueError, match=r'driver="host"'):
+        FenixConfig(exact=True, driver="device")
+    with pytest.raises(ValueError, match=r'driver="pipes"\|"farm"'):
+        FenixConfig(num_pipes=2, fast_mode=False)
+    with pytest.raises(ValueError, match="unknown driver"):
+        FenixConfig(driver="gpu")
+    with pytest.raises(ValueError, match="not both"):
+        FenixConfig(driver="device", device_path=True)
+
+
+# ---------------------------------------------------------------------------
+# zero host syncs on the device-family drivers
+# ---------------------------------------------------------------------------
+
+_B, _CPE, _N = 128, 2, 900
+
+
+@pytest.fixture(scope="module")
+def small_trace():
+    return packet_stream(make_flows("iscx", 12, seed=5), limit=_N)
+
+
+@pytest.mark.parametrize("driver", ("device", "pipes", "farm"))
+def test_device_drivers_run_with_zero_host_syncs(small_trace, driver):
+    sys_ = FenixSystem(FenixConfig(batch_size=_B, control_plane_every=_CPE,
+                                   driver=driver), ByLenModel())
+    sys_.run_trace(dict(small_trace))
+    assert sys_.host_syncs == 0
+    assert sys_.stats["packets"] == _N
+
+
+def test_host_oracle_syncs_once_per_window(small_trace):
+    sys_ = FenixSystem(FenixConfig(batch_size=_B, control_plane_every=_CPE,
+                                   driver="host"), ByLenModel())
+    sys_.run_trace(dict(small_trace))
+    n_batches = -(-_N // _B)
+    assert sys_.host_syncs == n_batches // _CPE > 0
+
+
+# ---------------------------------------------------------------------------
+# run_trace(trace=...) and its deprecated keyword pile
+# ---------------------------------------------------------------------------
+
+
+def test_run_trace_stream_kwarg_deprecated(small_trace):
+    sys_ = FenixSystem(FenixConfig(batch_size=_B), ByLenModel())
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        out = sys_.run_trace(stream=dict(small_trace))
+    assert len(out["verdict"]) == _N
+
+
+def test_run_trace_source_kwarg_deprecated(small_trace):
+    with tempfile.TemporaryDirectory() as tmp:
+        pcap = os.path.join(tmp, "t.pcap")
+        ti.write_pcap(small_trace, pcap)
+        sys_ = FenixSystem(FenixConfig(batch_size=_B), ByLenModel())
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            out = sys_.run_trace(source=pcap, limit=256)
+        assert len(out["verdict"]) == 256
+
+
+def test_run_trace_needs_exactly_one_trace(small_trace):
+    sys_ = FenixSystem(FenixConfig(batch_size=_B), ByLenModel())
+    with pytest.raises(ValueError, match="exactly one trace"):
+        sys_.run_trace()
+    with pytest.raises(ValueError, match="exactly one trace"):
+        with pytest.warns(DeprecationWarning):
+            sys_.run_trace(dict(small_trace), stream=dict(small_trace))
+
+
+def test_run_trace_positional_dict_does_not_warn(small_trace):
+    sys_ = FenixSystem(FenixConfig(batch_size=_B), ByLenModel())
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        sys_.run_trace(dict(small_trace))
+    assert not [w for w in rec
+                if issubclass(w.category, DeprecationWarning)]
+
+
+def test_run_trace_tracespec_streaming_matches_dict(small_trace):
+    """TraceSpec over a dict source streams through the double-buffered
+    driver and reproduces the in-memory replay bit-for-bit."""
+    ref = FenixSystem(FenixConfig(batch_size=_B, control_plane_every=_CPE),
+                      ByLenModel())
+    v_ref = ref.run_trace(dict(small_trace))["verdict"]
+    for overlap in (True, False):
+        sys_ = FenixSystem(FenixConfig(batch_size=_B,
+                                       control_plane_every=_CPE),
+                           ByLenModel())
+        spec = TraceSpec(dict(small_trace), chunk_pkts=300,
+                         overlap=overlap)
+        v = sys_.run_trace(spec)["verdict"]
+        np.testing.assert_array_equal(v, v_ref)
+        assert sys_.host_syncs == 0
+        assert sys_.stats == ref.stats

@@ -143,8 +143,8 @@ def test_farm_e1_bitwise_identical_to_pipes_driver():
         def mk(use_farm, p=num_pipes):
             return FenixSystem(
                 FenixConfig(batch_size=256, control_plane_every=3,
-                            num_pipes=p, pipes_path=True,
-                            farm_path=use_farm), model)
+                            num_pipes=p,
+                            driver="farm" if use_farm else "pipes"), model)
 
         _bit_identical(mk(False), mk(True), stream)
 
@@ -158,8 +158,8 @@ def test_farm_e1_identity_with_serve_cap():
     def mk(use_farm):
         return FenixSystem(
             FenixConfig(engine=ecfg, io=vio.IOConfig(serve_max=8),
-                        batch_size=256, num_pipes=2, pipes_path=True,
-                        farm_path=use_farm), model)
+                        batch_size=256, num_pipes=2,
+                        driver="farm" if use_farm else "pipes"), model)
 
     _bit_identical(mk(False), mk(True), stream)
 
@@ -171,7 +171,7 @@ def det_farms():
     def mk(e):
         return FenixSystem(
             FenixConfig(batch_size=256, control_plane_every=4,
-                        num_engines=e, farm_path=True), model)
+                        num_engines=e, driver="farm"), model)
 
     return mk(1), mk(ENGINES)
 

@@ -207,7 +207,7 @@ def det_systems():
     def mk(p):
         return FenixSystem(
             FenixConfig(batch_size=256, control_plane_every=4,
-                        num_pipes=p, pipes_path=True), model)
+                        num_pipes=p, driver="pipes"), model)
 
     return mk(1), mk(PIPES)
 
@@ -219,7 +219,7 @@ def test_pipes_p1_bitwise_identical_to_device_driver():
     s_ref = FenixSystem(FenixConfig(batch_size=512, control_plane_every=3),
                         model)
     s_one = FenixSystem(FenixConfig(batch_size=512, control_plane_every=3,
-                                    pipes_path=True), model)
+                                    driver="pipes"), model)
     v_ref = s_ref.run_trace(stream)["verdict"]
     v_one = s_one.run_trace(stream)["verdict"]
     assert s_ref.stats == s_one.stats

@@ -330,8 +330,9 @@ def test_flows_from_stream_inverts_packet_stream():
 
 
 def test_run_trace_source_matches_stream():
-    """The drivers' source= selector replays identically to the in-memory
-    stream (device driver, deterministic model)."""
+    """The streaming TraceSpec driver (double-buffered and synchronous)
+    replays identically to the in-memory stream (device driver,
+    deterministic model)."""
     import jax.numpy as jnp
 
     from repro.core.fenix import FenixConfig, FenixSystem
@@ -349,7 +350,15 @@ def test_run_trace_source_matches_stream():
         v_stream = FenixSystem(FenixConfig(batch_size=256),
                                ByLen()).run_trace(oracle)["verdict"]
         sys_src = FenixSystem(FenixConfig(batch_size=256), ByLen())
-        v_src = sys_src.run_trace(source=pcap, limit=1024)["verdict"]
+        v_src = sys_src.run_trace(
+            ti.TraceSpec(pcap, limit=1024))["verdict"]
         np.testing.assert_array_equal(v_src, v_stream)
-        with pytest.raises(ValueError, match="exactly one of"):
-            sys_src.run_trace(oracle, source=pcap)
+        # a bare path works too (wrapped into a default TraceSpec), and
+        # double-specifying the trace is rejected
+        sys_p = FenixSystem(FenixConfig(batch_size=256), ByLen())
+        v_path = sys_p.run_trace(
+            ti.TraceSpec(pcap, limit=1024, overlap=False))["verdict"]
+        np.testing.assert_array_equal(v_path, v_stream)
+        with pytest.raises(ValueError, match="exactly one trace"):
+            with pytest.warns(DeprecationWarning):
+                sys_src.run_trace(oracle, source=pcap)

@@ -1,0 +1,73 @@
+"""Deprecated-kwarg lint: no new in-repo uses of the pre-driver= API.
+
+The ``FenixConfig(driver=...)`` redesign keeps the old boolean knobs
+(``fast_mode``/``device_path``/``pipes_path``/``farm_path``) and
+``run_trace``'s ``trace_labels=``/``labels_by_flow=`` working through a
+deprecation shim — for downstream users, not for this repo.  This
+dep-free checker greps every tracked ``.py`` file for the deprecated
+spellings and fails on any hit outside the allowlist (the shim itself
+and the suite that tests it), so the legacy surface can't creep back in
+via copy-paste.
+
+Run from anywhere: ``python tools/check_deprecated.py``.  Exit 0 clean,
+1 with one ``path:line: text`` row per violation.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# keyword-argument uses of the deprecated names: the `=` must be followed
+# by a value so prose like ``trace_labels=, limit=`` in docstrings that
+# *describe* the deprecated surface stays legal
+PATTERN = re.compile(
+    r"\b(fast_mode|device_path|pipes_path|farm_path"
+    r"|trace_labels|labels_by_flow)\s*=\s*[^=,\s)]")
+
+# the shim that implements the deprecated surface, the tests that pin
+# it, and this checker's own docstring
+ALLOWED = {
+    os.path.join("src", "repro", "core", "fenix.py"),
+    os.path.join("tests", "test_driver_api.py"),
+    os.path.join("tools", "check_deprecated.py"),
+}
+
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "fixtures",
+             "results", "node_modules", ".venv"}
+
+
+def iter_py_files():
+    for root, dirs, files in os.walk(REPO):
+        dirs[:] = [d for d in dirs if d not in SKIP_DIRS]
+        for f in files:
+            if f.endswith(".py"):
+                yield os.path.join(root, f)
+
+
+def main() -> int:
+    violations = []
+    for path in sorted(iter_py_files()):
+        rel = os.path.relpath(path, REPO)
+        if rel in ALLOWED:
+            continue
+        with open(path, encoding="utf-8") as fh:
+            for i, line in enumerate(fh, 1):
+                if PATTERN.search(line):
+                    violations.append(f"{rel}:{i}: {line.rstrip()}")
+    if violations:
+        print("deprecated pre-driver= kwargs found outside the shim "
+              "(use FenixConfig(driver=...) / run_trace(trace=...)):",
+              file=sys.stderr)
+        for v in violations:
+            print(f"  {v}", file=sys.stderr)
+        return 1
+    print(f"check_deprecated: clean ({len(ALLOWED)} allowlisted files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
